@@ -1,0 +1,114 @@
+"""Shared harness for the paper-figure benchmarks.
+
+Each benchmark trains micro-scale T-MUX models on the synthetic proxies
+(DESIGN.md §8: offline container, trends-not-absolute-numbers) and emits a
+JSON record under results/bench/.  ``benchmarks.run`` drives them all.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_smoke_config
+from repro.core.retrieval import retrieval_accuracy
+from repro.data.pipeline import mux_batches
+from repro.data.synthetic import (KeywordClassificationTask, PairMatchTask,
+                                  RetrievalTask, TaggingTask)
+from repro.models import Backbone
+from repro.training.trainer import Trainer, TrainConfig
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results/bench")
+
+# Micro-scale defaults: 2-layer d=256 T-MUX on vocab-128 synthetic tasks —
+# small enough for CPU, large enough to show the paper's N-trends.
+MICRO = dict(n_layers=2, vocab=128, seq_len=16, groups=16, steps=400,
+             lr=3e-3, eval_batches=8)
+# "fast" mode for CI smoke of the bench harness itself
+if os.environ.get("REPRO_BENCH_FAST"):
+    MICRO.update(steps=60, groups=8, eval_batches=2)
+
+
+def micro_config(mux_n: int, *, arch: str = "tmux-12l-768h", **overrides):
+    cfg = get_smoke_config(arch, mux_n=mux_n)
+    kw = dict(n_layers=MICRO["n_layers"], vocab=MICRO["vocab"])
+    kw.update(overrides)
+    return dataclasses.replace(cfg, **kw)
+
+
+def make_task(name: str, vocab: int, seq_len: int):
+    if name == "retrieval":
+        return RetrievalTask(vocab=vocab, seq_len=seq_len)
+    if name == "cls":          # SST-2/QNLI proxy
+        return KeywordClassificationTask(vocab=vocab, seq_len=seq_len,
+                                         n_classes=4)
+    if name == "pair":         # MNLI/QQP proxy
+        return PairMatchTask(vocab=vocab, seq_len=seq_len)
+    if name == "tag":          # CoNLL NER proxy
+        return TaggingTask(vocab=vocab, seq_len=seq_len)
+    raise ValueError(name)
+
+
+def train_and_eval(key, cfg, task_name: str, *, steps=None, lr=None,
+                   groups=None) -> dict:
+    """Train a muxed model on a synthetic task; return final metrics."""
+    steps = steps or MICRO["steps"]
+    lr = lr or MICRO["lr"]
+    groups = groups or MICRO["groups"]
+    task = make_task(task_name, cfg.vocab, MICRO["seq_len"])
+    ttask = {"retrieval": "retrieval", "cls": "cls", "pair": "cls",
+             "tag": "tag"}[task_name]
+    n_classes = getattr(task, "n_classes", 0)
+    tcfg = TrainConfig(task=ttask, n_classes=n_classes, lr=lr,
+                       warmup=max(10, steps // 20), total_steps=steps)
+    n = max(cfg.mux.n, 1)
+
+    def batch_iter():
+        for b in mux_batches(task, groups, n, steps):
+            yield b if cfg.mux.active else {k: v[:, 0] for k, v in b.items()}
+
+    t0 = time.time()
+    state, hist = Trainer.fit(key, cfg, tcfg, batch_iter(), log_every=steps)
+    train_time = time.time() - t0
+
+    # eval
+    eval_step = jax.jit(Trainer.make_eval_step(cfg, tcfg))
+    rng = np.random.default_rng(10_000)
+    accs, retr = [], []
+    for _ in range(MICRO["eval_batches"]):
+        d = task.sample(groups * n, rng)
+        batch = {k: jnp.asarray(v.reshape(groups, n, *v.shape[1:]))
+                 for k, v in d.items()}
+        if not cfg.mux.active:
+            batch = {k: v[:, 0] for k, v in batch.items()}
+        m = eval_step(state["params"], batch, key)
+        accs.append(float(m["acc"]))
+        if cfg.mux.active:
+            out = Backbone.apply(state["params"], batch["tokens"], cfg)
+            retr.append(float(retrieval_accuracy(
+                out["demuxed"], batch["tokens"],
+                state["params"]["embed"]["table"])))
+    rec = {"n": n, "task": task_name, "acc": float(np.mean(accs)),
+           "train_time_s": round(train_time, 1),
+           "final_loss": hist[-1]["loss"]}
+    if retr:
+        rec["retrieval_acc"] = float(np.mean(retr))
+    return rec, state
+
+
+def save(name: str, payload):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"[bench] wrote {path}")
+    return path
+
+
+def banner(title: str):
+    print(f"\n=== {title} " + "=" * max(0, 60 - len(title)))

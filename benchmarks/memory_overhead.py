@@ -1,0 +1,67 @@
+"""Paper Fig. 12 / A.12: inference memory overhead vs N.
+
+Analytic accounting on the full T-MUX (12L/768H) config plus measured live
+bytes on the micro config: params grow only by the demux prefix rows; the
+demux activation (B, N, L, d) is the linear-but-gentle term the paper
+measures (~4x at N=40)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.configs.registry import get_config
+from repro.models import Backbone
+
+
+def analytic_bytes(cfg, batch, seq, dtype_bytes=2):
+    """Inference working set: params + backbone activs + demux activs."""
+    n = max(cfg.mux.n, 1)
+    p = cfg.param_count() * dtype_bytes
+    l = seq + cfg.mux.prefix_len
+    act = batch * l * cfg.d_model * dtype_bytes * 4        # mixed stream
+    demux = batch * n * l * cfg.d_model * dtype_bytes      # (B, N, L, d)
+    logits = batch * n * l * 4                              # argmax path
+    return {"params": p, "backbone_act": act, "demux_act": demux,
+            "total": p + act + demux + logits}
+
+
+def measured_bytes(cfg, batch=4, seq=24):
+    key = jax.random.PRNGKey(0)
+    params = Backbone.init(key, cfg)
+    n = max(cfg.mux.n, 1)
+    shape = (batch, n, seq) if cfg.mux.active else (batch, seq)
+    toks = jax.random.randint(key, shape, 0, cfg.vocab)
+    m = jax.jit(lambda p, t: Backbone.apply(p, t, cfg)["logits"]) \
+        .lower(params, toks).compile().memory_analysis()
+    return int(m.temp_size_in_bytes + m.argument_size_in_bytes)
+
+
+def run(ns=(1, 2, 4, 8, 16, 40)):
+    common.banner("Fig 12 — memory overhead vs N")
+    full = get_config("tmux-12l-768h")
+    rows = []
+    base_an = base_ms = None
+    for n in ns:
+        cfg_full = dataclasses.replace(
+            full, mux=dataclasses.replace(full.mux, n=n))
+        an = analytic_bytes(cfg_full, batch=60, seq=128)
+        cfg_micro = common.micro_config(n)
+        ms = measured_bytes(cfg_micro)
+        base_an = base_an or an["total"]
+        base_ms = base_ms or ms
+        rows.append({"n": n, "analytic_total_mb": an["total"] / 2**20,
+                     "analytic_ratio": an["total"] / base_an,
+                     "measured_micro_mb": ms / 2**20,
+                     "measured_ratio": ms / base_ms})
+        print(f"  N={n:2d}: analytic {an['total']/2**20:8.1f} MB "
+              f"({an['total']/base_an:4.2f}x)   micro-measured "
+              f"{ms/2**20:7.1f} MB ({ms/base_ms:4.2f}x)")
+    common.save("memory_overhead", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,34 @@
+"""Paper Fig. 8a / A.5: alternative multiplexing strategies on task accuracy
+(Hadamard / Ortho / Binary / Learned-Hadamard)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from benchmarks import common
+
+
+def run(ns=(2, 8)):
+    common.banner("Fig 8a — mux strategies (task acc)")
+    settings = [("hadamard", False), ("ortho", False), ("binary", False),
+                ("hadamard", True)]   # learned
+    rows = []
+    for strat, learned in settings:
+        for n in ns:
+            cfg = common.micro_config(n)
+            cfg = dataclasses.replace(
+                cfg, mux=dataclasses.replace(cfg.mux, strategy=strat,
+                                             learned=learned))
+            rec, _ = common.train_and_eval(jax.random.PRNGKey(0), cfg, "pair")
+            rec.update(strategy=strat, learned=learned)
+            rows.append(rec)
+            tag = strat + ("+learned" if learned else "")
+            print(f"  {tag:17s} N={n:2d}: acc={rec['acc']:.3f} "
+                  f"retr={rec.get('retrieval_acc', 0):.3f}")
+    common.save("mux_strategies", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

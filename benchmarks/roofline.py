@@ -1,0 +1,57 @@
+"""§Roofline tabulation: reads launch/dryrun JSON records and renders the
+per-(arch × shape) table for EXPERIMENTS.md — three terms, dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs usefulness ratio."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN", "results/dryrun")
+
+
+def load(mesh="pod"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("mesh") == mesh or (mesh is None):
+            rows.append(r)
+    return rows
+
+
+def fmt_row(r):
+    if r.get("skipped"):
+        return (f"| {r['arch']} | {r['shape']} | — | — | — | "
+                f"skip ({r['skipped']}) | — |")
+    dom = r["dominant"]
+    frac = r.get("useful_flops_frac", 0.0)
+    return (f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | {dom} | "
+            f"{frac:.2f} |")
+
+
+def table(mesh="pod", mux_n=None):
+    rows = load(mesh)
+    if mux_n is not None:
+        rows = [r for r in rows if r.get("mux_n") == mux_n]
+    lines = [
+        "| arch | shape | compute (s) | memory (s) | collective (s) | "
+        "bottleneck | MODEL/HLO flops |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    lines += [fmt_row(r) for r in rows]
+    return "\n".join(lines)
+
+
+def run():
+    print("\n=== Roofline table (single pod, from dry-run records) ===")
+    t = table()
+    print(t)
+    n = len([r for r in load("pod")])
+    print(f"\n[{n} dry-run records found in {DRYRUN_DIR}]")
+    return t
+
+
+if __name__ == "__main__":
+    run()

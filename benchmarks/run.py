@@ -1,0 +1,46 @@
+"""Benchmark driver: one harness per paper table/figure (DESIGN.md §7).
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run fig3 fig4b # subset
+    REPRO_BENCH_FAST=1 ... python -m benchmarks.run    # CI smoke
+
+Dry-run/roofline records are produced separately by
+``python -m repro.launch.dryrun --all`` (own process: 512 fake devices).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks import (heads_ablation, image_mux, index_variance,
+                        memory_overhead, mux_strategies, retrieval_acc,
+                        roofline, small_models, task_acc_vs_n,
+                        throughput_vs_n)
+
+SUITES = {
+    "fig3": task_acc_vs_n.run,        # task acc vs N
+    "fig4b": retrieval_acc.run,       # retrieval warm-up acc
+    "fig4c": throughput_vs_n.run,     # throughput
+    "fig5a": heads_ablation.run,      # attention heads
+    "fig5b": small_models.run,        # smaller backbones
+    "fig7a": image_mux.run,           # MLP/CNN MNIST
+    "fig7b": index_variance.run,      # per-index variance + A4
+    "fig8a": mux_strategies.run,      # mux strategies
+    "fig12": memory_overhead.run,     # memory overhead
+    "roofline": roofline.run,         # §Roofline table from dry-run records
+}
+
+
+def main(argv):
+    names = argv or list(SUITES)
+    t0 = time.time()
+    for name in names:
+        if name not in SUITES:
+            raise SystemExit(f"unknown suite {name!r}; have {list(SUITES)}")
+        SUITES[name]()
+    print(f"\n[benchmarks.run] done ({time.time() - t0:.0f}s): "
+          f"{', '.join(names)}")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -1,0 +1,35 @@
+"""Paper Fig. 5b / A2: smaller backbones also multiplex (and yield higher
+throughput).  Compares depth/width-reduced T-MUX variants."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from benchmarks import common
+from benchmarks.throughput_vs_n import wallclock_throughput
+
+
+def run(ns=(2, 4, 8)):
+    common.banner("Fig 5b — smaller backbones")
+    variants = {
+        "base-2L-256H": dict(),
+        "small-2L-128H": dict(d_model=128),
+        "shallow-1L-256H": dict(n_layers=1),
+    }
+    rows = []
+    for name, ov in variants.items():
+        for n in ns:
+            cfg = common.micro_config(n, **ov)
+            rec, _ = common.train_and_eval(jax.random.PRNGKey(0), cfg, "cls")
+            rec["variant"] = name
+            rec["instances_per_s"] = round(wallclock_throughput(cfg), 1)
+            rows.append(rec)
+            print(f"  {name:15s} N={n:2d}: acc={rec['acc']:.3f} "
+                  f"thr={rec['instances_per_s']:.0f}/s")
+    common.save("small_models", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

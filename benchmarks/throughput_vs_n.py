@@ -1,0 +1,73 @@
+"""Paper Fig. 4c / R3: inference throughput vs N.
+
+Two measurements (DESIGN.md §3 hardware adaptation):
+  1. CPU wall-clock samples/s on this container (trend check, like the
+     paper's RTX-2080 numbers but smaller).
+  2. Analytic TPU roofline speedup from the compiled-cost model: multiplexing
+     divides backbone FLOPs/instance by ~N·L/(L+N) (prefix overhead — the
+     paper's reason 40x inputs give ~18x, not 40x).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.models import Backbone
+
+
+def wallclock_throughput(cfg, *, batch=8, seq_len=32, iters=20):
+    key = jax.random.PRNGKey(0)
+    params = Backbone.init(key, cfg)
+    n = max(cfg.mux.n, 1)
+    shape = (batch, n, seq_len) if cfg.mux.active else (batch, seq_len)
+    toks = jax.random.randint(key, shape, 0, cfg.vocab)
+
+    @jax.jit
+    def fwd(p, t):
+        return Backbone.apply(p, t, cfg)["logits"]
+
+    fwd(params, toks).block_until_ready()           # compile
+    t0 = time.time()
+    for _ in range(iters):
+        fwd(params, toks).block_until_ready()
+    dt = (time.time() - t0) / iters
+    instances = batch * n
+    return instances / dt
+
+
+def analytic_speedup(n, seq_len, d_model, n_layers, d_ff):
+    """Backbone FLOPs per instance, muxed vs vanilla (prefix overhead incl)."""
+    def flops(seq, batch_div):
+        per_tok = n_layers * (4 * d_model ** 2 + 2 * d_model * d_ff * 3
+                              + 2 * seq * d_model)
+        return seq * per_tok / batch_div
+    vanilla = flops(seq_len, 1)
+    muxed = flops(seq_len + n, n)  # N instances share one stream + prefix
+    return vanilla / muxed
+
+
+def run(ns=(1, 2, 4, 8, 16), seq_len=32):
+    common.banner("Fig 4c — throughput vs N")
+    rows = []
+    base = None
+    for n in ns:
+        cfg = common.micro_config(n)
+        thr = wallclock_throughput(cfg, seq_len=seq_len)
+        base = base or thr
+        ana = analytic_speedup(n, seq_len, cfg.d_model, cfg.n_layers,
+                               cfg.d_ff)
+        rows.append({"n": n, "instances_per_s": round(thr, 1),
+                     "speedup_cpu": round(thr / base, 2),
+                     "speedup_analytic": round(ana, 2)})
+        print(f"  N={n:2d}: {thr:9.1f} inst/s  cpu-speedup="
+              f"{thr / base:5.2f}x  analytic={ana:5.2f}x")
+    common.save("throughput_vs_n", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""DataMUX as a first-class feature of EVERY assigned architecture.
+
+Runs one muxed forward + one muxed train step through a reduced variant of
+each of the 10 assigned architectures (dense / MoE / SSM / hybrid / VLM /
+audio) — the paper's technique riding on modern backbones, beyond the
+paper's BERT-style encoder.
+
+    PYTHONPATH=src python examples/multi_arch_mux.py [--n 4]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ARCHS, get_smoke_config
+from repro.training.trainer import Trainer, TrainConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=4)
+    args = ap.parse_args()
+    key = jax.random.PRNGKey(0)
+    assigned = [a for a in ARCHS if not a.startswith("tmux")]
+
+    print(f"{'arch':24s} {'family':7s} {'params':>8s} {'loss':>7s} "
+          f"{'step time':>9s}")
+    for arch in assigned:
+        cfg = get_smoke_config(arch, mux_n=args.n)
+        tcfg = TrainConfig(task="lm", lr=1e-3, warmup=2, total_steps=10)
+        state = Trainer.init_state(key, cfg, tcfg)
+        step = jax.jit(Trainer.make_train_step(cfg, tcfg))
+        batch = {"tokens": jax.random.randint(
+            key, (2, args.n, 16), 0, cfg.vocab)}
+        if cfg.context_len:
+            batch["context"] = jnp.zeros((2, cfg.context_len,
+                                          cfg.context_dim))
+        state, m = step(state, batch, key)           # compile + step
+        t0 = time.time()
+        state, m = step(state, batch, key)
+        jax.block_until_ready(state)
+        dt = time.time() - t0
+        n_params = sum(x.size for x in jax.tree.leaves(state["params"]))
+        print(f"{arch:24s} {cfg.family:7s} {n_params/1e6:7.1f}M "
+              f"{float(m['loss']):7.3f} {dt*1e3:8.0f}ms")
+    print(f"\nall {len(assigned)} architectures multiplex N={args.n} "
+          f"streams through one backbone pass.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Quickstart: DataMUX in ~60 lines.
+
+Multiplexes N=4 synthetic sequences through one tiny Transformer stream,
+runs the paper's retrieval warm-up (Sec 3.3), then fine-tunes on a
+sentence-classification proxy with the mixed objective (Eq. 4).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_smoke_config
+from repro.core.retrieval import retrieval_accuracy
+from repro.data.pipeline import mux_batches
+from repro.data.synthetic import KeywordClassificationTask, RetrievalTask
+from repro.models import Backbone
+from repro.training.trainer import Trainer, TrainConfig
+
+N = 4                                     # instances per multiplexed stream
+key = jax.random.PRNGKey(0)
+
+# a 2-layer T-MUX (the paper's 12L/768H backbone family, reduced for CPU)
+cfg = get_smoke_config("tmux-12l-768h", mux_n=N)
+cfg = dataclasses.replace(cfg, n_layers=2, vocab=128)
+print(f"model: {cfg.name}  d={cfg.d_model}  N={cfg.mux.n} "
+      f"(strategy={cfg.mux.strategy} + {cfg.mux.demux})")
+
+# ---- stage 1: retrieval warm-up (Sec 3.3) --------------------------------
+retr = RetrievalTask(vocab=cfg.vocab, seq_len=16)
+tcfg = TrainConfig(task="retrieval", lr=3e-3, warmup=20, total_steps=500)
+state, hist = Trainer.fit(key, cfg, tcfg,
+                          mux_batches(retr, 16, N, 500),
+                          log_every=100,
+                          callback=lambda s, m: print(
+                              f"  warmup step {s:3d}  loss {m['loss']:.3f}"))
+
+d = retr.sample(32 * N)
+toks = jnp.asarray(d["tokens"].reshape(32, N, -1))
+out = Backbone.apply(state["params"], toks, cfg)
+acc = retrieval_accuracy(out["demuxed"], toks,
+                         state["params"]["embed"]["table"])
+print(f"retrieval accuracy after warm-up: {float(acc):.3f}  (paper R2: ~1.0)")
+
+# ---- stage 2: task fine-tune with auxiliary retrieval (Eq. 4) ------------
+task = KeywordClassificationTask(vocab=cfg.vocab, seq_len=16, n_classes=4)
+tcfg = TrainConfig(task="cls", n_classes=4, lr=3e-3, warmup=20,
+                   total_steps=500)
+state2 = Trainer.init_state(jax.random.PRNGKey(1), cfg, tcfg)
+state2["params"] = {**state["params"],
+                    "task_head": state2["params"]["task_head"]}  # warm start
+state2, _ = Trainer.fit(key, cfg, tcfg, mux_batches(task, 16, N, 500),
+                        state=state2, log_every=100,
+                        callback=lambda s, m: print(
+                            f"  finetune step {s:3d}  loss {m['loss']:.3f} "
+                            f"acc {m['acc']:.3f}"))
+
+eval_step = jax.jit(Trainer.make_eval_step(cfg, tcfg))
+d = task.sample(64 * N)
+batch = {k: jnp.asarray(v.reshape(64, N, *v.shape[1:])) for k, v in d.items()}
+m = eval_step(state2["params"], batch, key)
+print(f"\nclassification accuracy with N={N} multiplexing: "
+      f"{float(m['acc']):.3f} (chance 0.25)")
+print("N instances -> 1 forward pass: that is the DataMUX throughput win.")

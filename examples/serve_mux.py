@@ -1,0 +1,97 @@
+"""Multiplexed serving: N request streams share ONE KV-cache slot and one
+decode matmul (beyond-paper extension, DESIGN.md §3).
+
+Trains a small muxed LM briefly so generation is non-degenerate, then
+serves B×N streams through the batched Engine and reports per-stream
+throughput vs an unmuxed baseline.
+
+    PYTHONPATH=src python examples/serve_mux.py [--n 4] [--steps 40]
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_smoke_config
+from repro.data.pipeline import mux_batches
+from repro.data.synthetic import RetrievalTask
+from repro.models import Backbone
+from repro.serving.engine import Engine
+from repro.training.trainer import Trainer, TrainConfig
+
+
+def make_engine(n, key, steps=150):
+    cfg = get_smoke_config("tmux-12l-768h", mux_n=n)
+    cfg = dataclasses.replace(cfg, n_layers=2, vocab=128)
+    task = RetrievalTask(vocab=cfg.vocab, seq_len=16)
+    tcfg = TrainConfig(task="retrieval" if n > 1 else "lm", lr=3e-3,
+                       warmup=10, total_steps=steps)
+
+    def batches():
+        for b in mux_batches(task, 8, max(n, 1), steps):
+            yield b if cfg.mux.active else {k: v[:, 0] for k, v in b.items()}
+
+    state, _ = Trainer.fit(key, cfg, tcfg, batches(), log_every=steps)
+    return cfg, state["params"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--steps", type=int, default=120,
+                    help="brief warm-up training steps")
+    args = ap.parse_args()
+    key = jax.random.PRNGKey(0)
+
+    print(f"[serve] preparing muxed engine (N={args.n}) ...")
+    cfg, params = make_engine(args.n, key, args.steps)
+    eng = Engine(params, cfg, batch=args.batch,
+                 max_len=args.prompt_len + args.gen + 1)
+
+    prompts = jax.random.randint(
+        key, (args.batch, args.n, args.prompt_len), 0, cfg.vocab)
+    t0 = time.time()
+    out = eng.generate(prompts, args.gen)
+    out.block_until_ready()
+    dt_mux = time.time() - t0
+    streams = args.batch * args.n
+    print(f"  muxed:   {streams} streams x {args.gen} tokens in "
+          f"{dt_mux:.2f}s -> {streams * args.gen / dt_mux:.0f} tok/s")
+    print(f"  sample stream 0: {out[0, 0, :10].tolist()}")
+
+    print(f"[serve] unmuxed baseline (same total {streams} streams) ...")
+    cfg1, params1 = make_engine(1, key, args.steps)
+    eng1 = Engine(params1, cfg1, batch=streams,
+                  max_len=args.prompt_len + args.gen + 1)
+    prompts1 = prompts.reshape(streams, args.prompt_len)
+    t0 = time.time()
+    out1 = eng1.generate(prompts1, args.gen)
+    out1.block_until_ready()
+    dt_base = time.time() - t0
+    print(f"  unmuxed: {streams} streams x {args.gen} tokens in "
+          f"{dt_base:.2f}s -> {streams * args.gen / dt_base:.0f} tok/s")
+
+    # KV-cache footprint: the headline serving win — bytes / N
+    def cache_bytes(c, b, l):
+        cache = Backbone.init_cache(c, b, l)
+        return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
+
+    mux_b = cache_bytes(cfg, args.batch,
+                        args.prompt_len + args.gen + cfg.mux.prefix_len)
+    base_b = cache_bytes(cfg1, streams, args.prompt_len + args.gen)
+    print(f"\n  KV-cache bytes: muxed {mux_b/2**20:.1f} MB vs unmuxed "
+          f"{base_b/2**20:.1f} MB  ({base_b/max(mux_b,1):.1f}x saving)")
+    print(f"  wall-clock speedup at equal streams: {dt_base/dt_mux:.2f}x")
+    print("  (at this 2-layer micro scale the shared demux MLP is a large "
+          "fraction of the\n   backbone, so wall-clock gains are modest; "
+          "the win grows with backbone depth —\n   see EXPERIMENTS.md "
+          "§Perf pair C for the 32k-cache roofline: 31x per instance)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Pytree checkpointing to .npz (orbax-free, offline-friendly).
+
+Leaves are flattened with '/'-joined key paths; dtype/shape round-trip
+exactly (bf16 stored via uint16 view).  Metadata (step, config name) rides
+in a JSON side entry.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree):
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save_checkpoint(path: str, tree, *, step: int = 0, meta: dict | None = None):
+    flat = _flatten(tree)
+    arrays = {}
+    dtypes = {}
+    for k, v in flat.items():
+        arr = np.asarray(jax.device_get(v))
+        if arr.dtype == jnp.bfloat16:
+            arrays[k] = arr.view(np.uint16)
+            dtypes[k] = "bfloat16"
+        else:
+            arrays[k] = arr
+            dtypes[k] = str(arr.dtype)
+    arrays["__meta__"] = np.frombuffer(
+        json.dumps({"step": step, "dtypes": dtypes,
+                    **(meta or {})}).encode(), dtype=np.uint8)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                               suffix=".npz.tmp")
+    os.close(fd)
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **arrays)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+
+
+def load_checkpoint(path: str, tree_like):
+    """Restore into the structure of ``tree_like`` (shapes must match)."""
+    with np.load(path) as data:
+        meta = json.loads(bytes(data["__meta__"]).decode())
+        dtypes = meta["dtypes"]
+        flat_like = _flatten(tree_like)
+        restored = {}
+        for k in flat_like:
+            arr = data[k]
+            if dtypes[k] == "bfloat16":
+                arr = arr.view(jnp.bfloat16)
+            restored[k] = jnp.asarray(arr)
+    # unflatten by path
+    paths, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    leaves = []
+    for path, _ in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        leaves.append(restored[key])
+    return jax.tree_util.tree_unflatten(treedef, leaves), meta

@@ -1,0 +1,19 @@
+from repro.configs.base import (
+    INPUT_SHAPES,
+    ModelConfig,
+    MuxConfig,
+    ShapeConfig,
+    replace,
+)
+from repro.configs.registry import ARCHS, get_config, get_smoke_config
+
+__all__ = [
+    "INPUT_SHAPES",
+    "ModelConfig",
+    "MuxConfig",
+    "ShapeConfig",
+    "replace",
+    "ARCHS",
+    "get_config",
+    "get_smoke_config",
+]

@@ -1,0 +1,288 @@
+"""Config system: ModelConfig (composable architecture description),
+MuxConfig (the paper's technique as a first-class feature), input shapes.
+
+Every assigned architecture is expressed as a ModelConfig; the generic
+backbone in ``repro/models/backbone.py`` interprets it.  Layer heterogeneity
+(MoE interleave, hybrid attention:Mamba ratios, sliding-window patterns,
+cross-attention insertion) is described declaratively and compiled into a
+repeating layer pattern that is scanned over (bounded HLO at 96 layers).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.nn.attention import AttnConfig, MLAConfig
+from repro.nn.moe import MoEConfig
+from repro.nn.ssm import MambaConfig, XLSTMConfig
+
+
+# ---------------------------------------------------------------------------
+# DataMUX (paper technique) config
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MuxConfig:
+    """Data multiplexing — Murahari et al., NeurIPS 2022.
+
+    n > 1 multiplexes n instances through one backbone stream.  n == 1 is a
+    configured-but-inactive wrapper (identity semantics, used for baselines).
+    """
+    n: int = 1
+    strategy: str = "hadamard"   # hadamard | ortho | lowrank | binary | identity
+    learned: bool = False        # unfreeze phi (paper A.5 "Learned")
+    demux: str = "index_embed"   # index_embed | mlp   (paper Sec 3.2)
+    demux_hidden: int = 0        # 0 -> 2 * d_model
+    demux_layers: int = 2
+    retrieval_alpha: float = 0.1  # aux retrieval loss weight (paper Eq. 4)
+    use_kernel: bool = False      # fused Pallas multiplexer
+    prefix_pad: int = 0           # pad prefix to a multiple (mesh-divisible
+                                  # mixed-stream length; beyond-paper §Perf)
+
+    @property
+    def active(self) -> bool:
+        return self.n > 1
+
+    @property
+    def prefix_len(self) -> int:
+        """Index-embedding demux prepends an N-token prefix (paper Sec 3.2).
+        With ``prefix_pad`` k > 0, the prefix is padded with ε^pad tokens to
+        a multiple of k so seq_len + prefix stays mesh-shardable."""
+        if not (self.active and self.demux == "index_embed"):
+            return 0
+        p = self.n
+        if self.prefix_pad:
+            p += -p % self.prefix_pad
+        return p
+
+
+# ---------------------------------------------------------------------------
+# Model config
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    cite: str = ""
+    head_dim: int = 0                # 0 -> d_model // n_heads
+    norm: str = "rmsnorm"
+    activation: str = "silu"
+    gated_mlp: bool = True
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = True
+    logits_softcap: float = 0.0
+    # attention pattern
+    window: Optional[int] = None     # sliding-window size for local layers
+    global_every: int = 0            # k>0: every k-th layer full attn, rest local
+    # MoE
+    moe: Optional[MoEConfig] = None
+    moe_layer_start: int = 0         # layers < start are dense MLP
+    moe_every: int = 1               # every k-th layer (within MoE region) is MoE
+    # MLA (DeepSeek)
+    mla: Optional[MLAConfig] = None
+    # SSM / hybrid
+    mamba: Optional[MambaConfig] = None
+    xlstm: Optional[XLSTMConfig] = None
+    attn_every: int = 0              # hybrid: layer i is attention iff i % attn_every == attn_offset
+    attn_offset: int = 0
+    slstm_every: int = 0             # xLSTM: layer i is sLSTM iff (i+1) % slstm_every == 0
+    # multimodal (stub frontend per assignment: embeddings provided)
+    cross_attn_every: int = 0        # VLM: cross-attn sublayer every k layers
+    context_dim: int = 0             # image/audio embedding width
+    context_len: int = 0             # number of context embeddings
+    encoder: Optional["ModelConfig"] = None  # enc-dec (whisper) encoder stack
+    causal: bool = True
+    # the paper's technique
+    mux: MuxConfig = dataclasses.field(default_factory=MuxConfig)
+    # numerics / compilation
+    dtype: str = "bfloat16"
+    param_dtype: str = "bfloat16"
+    remat: str = "dots"              # none | dots | full
+    scan_layers: bool = True
+    seq_parallel: bool = False       # constrain inter-block activations to
+                                     # model-sharded d (Megatron-SP; §Perf A3:
+                                     # XLA emits reduce-scatter + all-gather
+                                     # instead of all-reduce)
+
+    # -- derived -------------------------------------------------------------
+
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def compute_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def attn_config(self, *, window: Optional[int] = None,
+                    use_flash: bool = False) -> AttnConfig:
+        return AttnConfig(
+            dim=self.d_model, n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads, head_dim=self.head_dim_,
+            qkv_bias=self.qkv_bias, rope_theta=self.rope_theta,
+            causal=self.causal, window=window, use_flash=use_flash)
+
+    # -- layer pattern ---------------------------------------------------------
+
+    def layer_kinds(self) -> list[dict]:
+        """Static per-layer structure: mixer type, mlp type, window, cross."""
+        kinds = []
+        for i in range(self.n_layers):
+            mixer = "attn"
+            if self.mla is not None:
+                mixer = "mla"
+            if self.xlstm is not None:
+                mixer = "slstm" if (self.slstm_every and
+                                    (i + 1) % self.slstm_every == 0) else "mlstm"
+            elif self.mamba is not None:
+                if self.attn_every:
+                    mixer = "attn" if i % self.attn_every == self.attn_offset \
+                        else "mamba"
+                else:
+                    mixer = "mamba"
+            window = None
+            if mixer == "attn" and self.window is not None:
+                is_global = (self.global_every and
+                             (i + 1) % self.global_every == 0)
+                window = None if is_global else self.window
+            mlp = None
+            if mixer in ("attn", "mla", "mamba") and (self.d_ff or self.moe):
+                mlp = "dense"
+                if (self.moe is not None and i >= self.moe_layer_start and
+                        (i - self.moe_layer_start) % self.moe_every == 0):
+                    mlp = "moe"
+            cross = bool(self.cross_attn_every and
+                         i % self.cross_attn_every == 0 and
+                         self.context_len > 0)
+            kinds.append(dict(mixer=mixer, mlp=mlp, window=window,
+                              cross=cross))
+        return kinds
+
+    def layer_pattern(self) -> tuple[int, int, int]:
+        """(head_len, period, n_groups): layers [0, head) run unscanned, then
+        n_groups repeats of ``period`` layers are scanned, then the remainder
+        runs unscanned."""
+        kinds = self.layer_kinds()
+        n = self.n_layers
+        if not self.scan_layers:
+            return (n, 1, 0)
+        # Find the smallest period p and head h such that
+        # kinds[h:h+p*g] is g repeats of kinds[h:h+p] with g maximal.
+        best = (n, 1, 0)  # fully unscanned fallback
+        for head in range(0, min(n, 8)):
+            for period in range(1, 13):
+                groups = 0
+                while True:
+                    s = head + (groups + 1) * period
+                    if s > n:
+                        break
+                    if kinds[head + groups * period: s] != kinds[head: head + period]:
+                        break
+                    groups += 1
+                if groups >= 2:
+                    scanned = period * groups
+                    best_scanned = best[1] * best[2]
+                    if scanned > best_scanned or (
+                            scanned == best_scanned and period < best[1]):
+                        best = (head, period, groups)
+        return best
+
+    def param_count(self) -> int:
+        """Approximate parameter count (for MODEL_FLOPS = 6*N*D roofline)."""
+        d, v = self.d_model, self.vocab
+        total = v * d  # embedding
+        if not self.tie_embeddings:
+            total += v * d
+        for k in self.layer_kinds():
+            if k["mixer"] == "attn":
+                hd = self.head_dim_
+                total += d * (self.n_heads + 2 * self.n_kv_heads) * hd \
+                    + self.n_heads * hd * d
+            elif k["mixer"] == "mla":
+                m = self.mla
+                total += (d * m.q_lora_rank +
+                          m.q_lora_rank * m.n_heads * m.qk_head_dim +
+                          d * (m.kv_lora_rank + m.qk_rope_head_dim) +
+                          m.kv_lora_rank * m.n_heads *
+                          (m.qk_nope_head_dim + m.v_head_dim) +
+                          m.n_heads * m.v_head_dim * d)
+            elif k["mixer"] == "mamba":
+                c = self.mamba
+                di = c.d_inner
+                total += d * 2 * di + c.d_conv * di + \
+                    di * (c.dt_rank_ + 2 * c.d_state) + c.dt_rank_ * di + \
+                    di * c.d_state + di + di * d
+            elif k["mixer"] == "mlstm":
+                c = self.xlstm
+                di = c.d_inner
+                total += d * 2 * di + 3 * di * di + 2 * di * c.n_heads + \
+                    di * di + di * d
+            elif k["mixer"] == "slstm":
+                total += 4 * d * d + 4 * d * d // self.xlstm.n_heads + \
+                    2 * d * int(4 * d / 3)
+            if k["cross"]:
+                hd = self.head_dim_
+                total += (d * self.n_heads * hd +
+                          2 * self.context_dim * self.n_kv_heads * hd +
+                          self.n_heads * hd * d)
+            if k["mlp"] == "dense":
+                mult = 3 if self.gated_mlp else 2
+                total += mult * d * self.d_ff
+            elif k["mlp"] == "moe":
+                m = self.moe
+                mult = 3 if m.gated else 2
+                total += m.n_experts * mult * d * m.moe_ff + d * m.n_experts
+                total += m.n_shared_experts * mult * d * m.moe_ff
+        if self.encoder is not None:
+            total += self.encoder.param_count()
+        return total
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: only routed top-k experts)."""
+        if self.moe is None:
+            return self.param_count()
+        m = self.moe
+        mult = 3 if m.gated else 2
+        per_expert = mult * self.d_model * m.moe_ff
+        n_moe_layers = sum(1 for k in self.layer_kinds() if k["mlp"] == "moe")
+        inactive = n_moe_layers * (m.n_experts - m.top_k) * per_expert
+        return self.param_count() - inactive
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def replace(cfg, **kw):
+    return dataclasses.replace(cfg, **kw)

@@ -1,0 +1,33 @@
+"""deepseek-v3-671b — MoE, 61L d_model=7168 128H (MLA), vocab=129280,
+MoE 256 routed experts top-8 + 1 shared, expert width 2048 (the assignment's
+d_ff=2048 is the expert width; the first 3 layers are dense with the model's
+published dense FFN width 18432).  MLA with compressed-latent KV cache; MTP
+head (1 extra predicted token) included.  [arXiv:2412.19437]"""
+from repro.configs.base import ModelConfig
+from repro.nn.attention import MLAConfig
+from repro.nn.moe import MoEConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=128,
+    n_kv_heads=128,
+    d_ff=18432,                # dense layers (0-2); assigned d_ff=2048 = moe_ff
+    vocab=129280,
+    cite="arXiv:2412.19437",
+    mla=MLAConfig(
+        dim=7168, n_heads=128, q_lora_rank=1536, kv_lora_rank=512,
+        qk_nope_head_dim=128, qk_rope_head_dim=64, v_head_dim=128),
+    moe=MoEConfig(
+        dim=7168, moe_ff=2048, n_experts=256, top_k=8, n_shared_experts=1,
+        router_scoring="sigmoid", activation="silu", gated=True),
+    moe_layer_start=3,         # first 3 layers dense (DeepSeek-V3)
+    moe_every=1,
+    norm="rmsnorm",
+    activation="silu",
+    gated_mlp=True,
+    tie_embeddings=False,
+    remat="full",
+)

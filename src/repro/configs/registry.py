@@ -1,0 +1,127 @@
+"""Architecture registry: ``--arch <id>`` resolution + reduced smoke variants.
+
+Smoke variants keep the family's structure (MoE routing, hybrid interleave,
+window pattern, cross-attn, enc-dec) at CPU-runnable scale: 2-4 layers,
+d_model <= 512, <= 4 experts, small vocab.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs import base
+from repro.configs.base import ModelConfig, MuxConfig
+from repro.nn.attention import MLAConfig
+from repro.nn.moe import MoEConfig
+from repro.nn.ssm import MambaConfig, XLSTMConfig
+
+from repro.configs import (  # noqa: E402  (config modules)
+    deepseek_v3_671b,
+    gemma3_4b,
+    gemma_7b,
+    jamba_1_5_large_398b,
+    llama4_scout_17b_a16e,
+    llama_3_2_vision_11b,
+    nemotron_4_340b,
+    qwen1_5_4b,
+    tmux_12l_768h,
+    whisper_base,
+    xlstm_125m,
+)
+
+ARCHS: dict[str, ModelConfig] = {
+    "qwen1.5-4b": qwen1_5_4b.CONFIG,
+    "nemotron-4-340b": nemotron_4_340b.CONFIG,
+    "xlstm-125m": xlstm_125m.CONFIG,
+    "deepseek-v3-671b": deepseek_v3_671b.CONFIG,
+    "jamba-1.5-large-398b": jamba_1_5_large_398b.CONFIG,
+    "llama-3.2-vision-11b": llama_3_2_vision_11b.CONFIG,
+    "whisper-base": whisper_base.CONFIG,
+    "gemma-7b": gemma_7b.CONFIG,
+    "llama4-scout-17b-a16e": llama4_scout_17b_a16e.CONFIG,
+    "gemma3-4b": gemma3_4b.CONFIG,
+    # the paper's own backbone (+ A2 small variants)
+    "tmux-12l-768h": tmux_12l_768h.CONFIG,
+    "tmux-12l-384h": tmux_12l_768h.CONFIG_12L_384H,
+    "tmux-4l-768h": tmux_12l_768h.CONFIG_4L_768H,
+}
+
+
+def get_config(arch: str, *, mux_n: int | None = None,
+               mux_strategy: str | None = None) -> ModelConfig:
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; have {sorted(ARCHS)}")
+    cfg = ARCHS[arch]
+    if mux_n is not None or mux_strategy is not None:
+        mux = dataclasses.replace(
+            cfg.mux,
+            **({"n": mux_n} if mux_n is not None else {}),
+            **({"strategy": mux_strategy} if mux_strategy else {}))
+        cfg = dataclasses.replace(cfg, mux=mux)
+    return cfg
+
+
+def get_smoke_config(arch: str, *, mux_n: int = 1) -> ModelConfig:
+    """Reduced same-family variant: 2-4 layers, d_model <= 512, <= 4 experts.
+
+    Runs a real forward/train step on CPU (fp32)."""
+    cfg = get_config(arch)
+    d = min(cfg.d_model, 256)
+    heads = 4
+    kv = min(cfg.n_kv_heads, heads)
+    kv = heads // max(1, heads // kv)  # keep divisibility
+    kw: dict = dict(
+        name=cfg.name + "-smoke",
+        n_layers=4,
+        d_model=d,
+        n_heads=heads,
+        n_kv_heads=kv,
+        head_dim=64 if cfg.head_dim else 0,
+        d_ff=4 * d if cfg.d_ff else 0,
+        vocab=512,
+        dtype="float32",
+        param_dtype="float32",
+        remat="none",
+        mux=dataclasses.replace(cfg.mux, n=mux_n),
+    )
+    if cfg.mla is not None:
+        kw["mla"] = MLAConfig(dim=d, n_heads=heads, q_lora_rank=64,
+                              kv_lora_rank=32, qk_nope_head_dim=32,
+                              qk_rope_head_dim=16, v_head_dim=32)
+    if cfg.moe is not None:
+        kw["moe"] = dataclasses.replace(
+            cfg.moe, dim=d, moe_ff=2 * d, n_experts=4,
+            top_k=min(cfg.moe.top_k, 2))
+        kw["moe_layer_start"] = min(cfg.moe_layer_start, 1)
+    if cfg.mamba is not None:
+        kw["mamba"] = dataclasses.replace(cfg.mamba, dim=d, chunk=16)
+        kw["attn_every"] = min(cfg.attn_every, 4) if cfg.attn_every else 0
+        kw["attn_offset"] = 1 if cfg.attn_every else 0
+    if cfg.xlstm is not None:
+        kw["xlstm"] = dataclasses.replace(cfg.xlstm, dim=d, n_heads=4,
+                                          chunk=16)
+        kw["slstm_every"] = 2
+    if cfg.global_every:
+        kw["window"] = 16
+        kw["global_every"] = 2
+    if cfg.cross_attn_every:
+        kw["cross_attn_every"] = 2
+        kw["context_dim"] = d
+        kw["context_len"] = 24
+    if cfg.encoder is not None:
+        kw["encoder"] = dataclasses.replace(
+            cfg.encoder, n_layers=2, d_model=d, n_heads=heads,
+            n_kv_heads=heads, d_ff=2 * d, vocab=512,
+            dtype="float32", param_dtype="float32")
+        kw["context_dim"] = d
+        kw["context_len"] = 24
+    return dataclasses.replace(cfg, **kw)
+
+
+def long_500k_supported(arch: str) -> bool:
+    """Sub-quadratic decode support (see DESIGN.md §Arch-applicability)."""
+    cfg = get_config(arch)
+    if cfg.family in ("ssm", "hybrid"):
+        return True
+    if cfg.window is not None:  # sliding-window dense (gemma3)
+        return True
+    return False

@@ -1,0 +1,43 @@
+"""whisper-base — audio enc-dec, 6L encoder + 6L decoder, d_model=512 8H
+d_ff=2048 vocab=51865; conv feature frontend is a STUB per the assignment:
+``input_specs`` provides mel-frame embeddings (B, 1500, 512) which the
+encoder transformer consumes; the decoder cross-attends every layer.
+RoPE replaces Whisper's learned absolute positions (TPU-idiomatic; noted in
+DESIGN.md).  [arXiv:2212.04356]"""
+from repro.configs.base import ModelConfig
+
+_ENCODER = ModelConfig(
+    name="whisper-base-encoder",
+    family="audio",
+    n_layers=6,
+    d_model=512,
+    n_heads=8,
+    n_kv_heads=8,
+    d_ff=2048,
+    vocab=51865,               # unused by the encoder stack
+    norm="layernorm",
+    activation="gelu",
+    gated_mlp=False,
+    causal=False,              # bidirectional encoder
+    scan_layers=False,
+)
+
+CONFIG = ModelConfig(
+    name="whisper-base",
+    family="audio",
+    n_layers=6,
+    d_model=512,
+    n_heads=8,
+    n_kv_heads=8,
+    d_ff=2048,
+    vocab=51865,
+    cite="arXiv:2212.04356",
+    encoder=_ENCODER,
+    cross_attn_every=1,        # decoder cross-attends on every layer
+    context_dim=512,
+    context_len=1500,          # 30 s of mel frames after the conv stub
+    norm="layernorm",
+    activation="gelu",
+    gated_mlp=False,
+    tie_embeddings=True,
+)

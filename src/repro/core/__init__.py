@@ -1,0 +1,12 @@
+"""DataMUX core: the paper's contribution as composable JAX modules.
+
+  * Multiplexer   — Sec 3.1: fixed per-index transform + position-wise average
+  * Demultiplexer — Sec 3.2: Index-Embedding (prefix) or per-index MLP demux
+  * retrieval     — Sec 3.3: self-supervised retrieval warm-up objective
+  * theory        — Sec 4.4 / A.3: subspace construction for attention
+"""
+from repro.core.multiplexer import Multiplexer
+from repro.core.demultiplexer import Demultiplexer
+from repro.core import retrieval, theory
+
+__all__ = ["Multiplexer", "Demultiplexer", "retrieval", "theory"]

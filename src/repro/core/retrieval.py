@@ -1,0 +1,48 @@
+"""Retrieval warm-up objective (paper Sec 3.3, Eq. 3).
+
+From the demultiplexed hidden states, retrieve the token identity of a
+*randomly chosen instance index I ~ U[1,N]* at every position:
+
+    L_retr(x^{1:N}) = Σ_j −log P(w_j^I | h_j^I)
+
+Memory note from the paper: retrieving every (i, j) pair is too expensive, so
+one random instance per position is sampled — we implement exactly that, with
+an option to score all instances (used by the evaluation metric).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def retrieval_logits(demuxed, embed_table):
+    """demuxed: (B, N, L, d); tied-embedding retrieval head -> (B, N, L, V)."""
+    return demuxed @ embed_table.astype(demuxed.dtype).T
+
+
+def retrieval_loss(rng, demuxed, tokens, embed_table, *, valid_mask=None):
+    """Paper Eq. 3: sample I ~ U[1,N] per position, CE on that instance only.
+
+    demuxed: (B, N, L, d); tokens: (B, N, L) int32 original inputs.
+    Returns scalar mean NLL.
+    """
+    b, n, l, d = demuxed.shape
+    idx = jax.random.randint(rng, (b, l), 0, n)                  # I per (b, j)
+    sel_h = jnp.take_along_axis(
+        demuxed, idx[:, None, :, None].astype(jnp.int32), axis=1)[:, 0]
+    sel_t = jnp.take_along_axis(tokens, idx[:, None, :], axis=1)[:, 0]
+    logits = (sel_h @ embed_table.astype(sel_h.dtype).T).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, sel_t[..., None], axis=-1)[..., 0]
+    if valid_mask is not None:
+        m = jnp.take_along_axis(valid_mask, idx[:, None, :], axis=1)[:, 0]
+        return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+    return jnp.mean(nll)
+
+
+def retrieval_accuracy(demuxed, tokens, embed_table):
+    """Exact-match retrieval accuracy over ALL (instance, position) pairs —
+    the paper's Fig. 4b evaluation metric."""
+    logits = retrieval_logits(demuxed, embed_table)
+    pred = jnp.argmax(logits, axis=-1)
+    return jnp.mean((pred == tokens).astype(jnp.float32))

@@ -1,0 +1,92 @@
+"""Numerical realisation of the paper's theoretical construction (Sec 4.4 /
+Appendix A.3): self-attention weights whose singular subspaces are grouped
+into N non-overlapping sets, so N multiplexed streams are processed without
+interference.
+
+Used by tests/test_theory.py to property-check:
+  (i)   value independence:  <W_V u^(k), W_V u^(k')> ≈ 0 for k != k'
+  (ii)  query-key separability: (W_K w)ᵀ(W_Q w) = Σ_k τ^(k) with each τ^(k)
+        depending only on stream k
+  (iii) head specialisation: zeroing singular values outside subspace k makes
+        the head's attention pattern equal the single-stream pattern.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import initializers
+
+
+def make_subspace_basis(key, d: int, n: int):
+    """Orthonormal basis of R^d split into n groups of m = d//n columns.
+
+    Returns R: (d, d) orthogonal; group k spans columns [k*m, (k+1)*m).
+    """
+    assert d % n == 0
+    return initializers.random_orthogonal(key, d)
+
+
+def project_to_subspace(x, basis, k: int, n: int):
+    """Project x (…, d) onto subspace k — models φ^k mapping stream k into
+    its own subspace (the construction's premise)."""
+    d = basis.shape[0]
+    m = d // n
+    bk = basis[:, k * m:(k + 1) * m]          # (d, m)
+    return (x @ bk) @ bk.T
+
+
+def make_value_matrix(key, basis, n: int, d_v: int | None = None):
+    """W_V = L Σ Rᵀ with R = ``basis`` — right singular vectors grouped per
+    subspace, L orthogonal ⇒ W_V maps the N input subspaces to N mutually
+    orthogonal output subspaces (paper Eq. 9–12)."""
+    d = basis.shape[0]
+    d_v = d_v or d
+    assert d_v >= d, "construction needs d_v >= d to keep all subspaces"
+    k1, k2 = jax.random.split(key)
+    left = initializers.random_orthogonal(k1, d_v)
+    sigma = jnp.zeros((d_v, d)).at[jnp.arange(d), jnp.arange(d)].set(
+        0.5 + jax.random.uniform(k2, (d,)))
+    return left @ sigma @ basis.T
+
+
+def make_qk_matrices(key, basis, n: int, d_k: int | None = None,
+                     focus: int | None = None):
+    """W_Q, W_K sharing left/right singular-space structure (paper Eq. 13–14).
+
+    If ``focus`` is an index k, singular values outside subspace k are zeroed
+    — the "head specialisation" option (τ^(k') = 0 for k' != k).
+    """
+    d = basis.shape[0]
+    d_k = d_k or d
+    assert d_k >= d
+    m = d // n
+    kq, kk, ks1, ks2 = jax.random.split(key, 4)
+    left = initializers.random_orthogonal(kq, d_k)  # shared dual basis
+
+    def build(skey):
+        sv = 0.5 + jax.random.uniform(skey, (d,))
+        if focus is not None:
+            mask = jnp.zeros((d,)).at[focus * m:(focus + 1) * m].set(1.0)
+            sv = sv * mask
+        sigma = jnp.zeros((d_k, d)).at[jnp.arange(d), jnp.arange(d)].set(sv)
+        return left @ sigma @ basis.T
+
+    return build(ks1), build(kk)
+
+
+def attention_head(q_w, k_w, v_w, x, *, scale=None):
+    """Single attention head on a (L, d) sequence (paper Eq. 5)."""
+    q = x @ q_w.T
+    k = x @ k_w.T
+    v = x @ v_w.T
+    scale = scale or (q.shape[-1] ** -0.5)
+    logits = (q @ k.T) * scale
+    probs = jax.nn.softmax(logits, axis=-1)
+    return probs @ v, probs
+
+
+def qk_tau(q_w, k_w, x_k):
+    """τ^(k) contribution of one stream (projected input x_k, (L, d)):
+    τ_{t,t'}^{(k)} = (W_K x_k[t'])ᵀ (W_Q x_k[t])."""
+    return (x_k @ k_w.T) @ (x_k @ q_w.T).T

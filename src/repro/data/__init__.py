@@ -1,0 +1,18 @@
+from repro.data.synthetic import (
+    RetrievalTask,
+    KeywordClassificationTask,
+    PairMatchTask,
+    TaggingTask,
+)
+from repro.data.images import SyntheticDigits
+from repro.data.pipeline import batches, mux_batches
+
+__all__ = [
+    "RetrievalTask",
+    "KeywordClassificationTask",
+    "PairMatchTask",
+    "TaggingTask",
+    "SyntheticDigits",
+    "batches",
+    "mux_batches",
+]

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for DataMUX hot spots (DESIGN.md §3).
+
+Three kernels, each a package with:
+  kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (auto interpret=True on CPU)
+  ref.py    — pure-jnp oracle used by the allclose test sweeps
+
+  multiplex/  fused φ-transform + accumulate:  (B,N,L,d)×(N,d) -> (B,L,d)
+              in ONE VMEM pass instead of N HBM round-trips.
+  demux/      fused index-embed demultiplexer MLP: computes
+              gelu(h·W1h + p·W1p + b1)·W2 + b2 without materialising the
+              (B,N,L,2d) concat in HBM.
+  attention/  causal flash attention (prefill hot spot), online-softmax
+              accumulation over K tiles.
+"""

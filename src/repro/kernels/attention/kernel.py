@@ -1,0 +1,115 @@
+"""Causal flash attention as a Pallas TPU kernel (prefill hot spot).
+
+Online-softmax over K tiles with the canonical revisited-output pattern:
+
+  grid (B·H, Lq/BQ, Lk/BK) — the K axis is the last (fastest) grid dim;
+  scratch holds the f32 accumulator (BQ, hd) and running max / normaliser
+  (BQ, 1), initialised at ik == 0 and flushed to the output tile at the
+  final K step.
+
+Blocks are (BQ, hd) / (BK, hd) ⇒ VMEM claim is O(BQ·hd + BK·hd + BQ·BK)
+independent of sequence length — this is what makes 32k prefill fit.
+Causal masking is positional (block-level skipping is a perf refinement;
+masked blocks still stream but contribute zeros).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, bq: int, bk: int,
+                  n_kblocks: int, seq_len: int):
+    iq, ik = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full(m_ref.shape, NEG_INF, jnp.float32)
+        l_ref[...] = jnp.zeros(l_ref.shape, jnp.float32)
+        acc_ref[...] = jnp.zeros(acc_ref.shape, jnp.float32)
+
+    q = q_ref[0].astype(jnp.float32)              # (BQ, hd)
+    k = k_ref[0].astype(jnp.float32)              # (BK, hd)
+    s = (q @ k.T) * scale                         # (BQ, BK)
+
+    q_idx = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_idx = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = k_idx < seq_len                        # padded keys
+    if causal:
+        mask &= k_idx <= q_idx
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]       # (BQ, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                        # (BQ, BK)
+    l_ref[...] = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    m_ref[...] = m_new
+    acc_ref[...] = acc_ref[...] * alpha + p @ v_ref[0].astype(jnp.float32)
+
+    @pl.when(ik == n_kblocks - 1)
+    def _done():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def pick_tiles(lq: int, lk: int, hd: int, itemsize: int) -> tuple[int, int]:
+    bq = min(256, lq)
+    bk = min(512, lk)
+    while bq > 8 and bq % 8 != 0:
+        bq //= 2
+    while bk > 8 and bk % 8 != 0:
+        bk //= 2
+    return bq, bk
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "scale", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    scale: float | None = None, interpret: bool = False):
+    """q, k, v: (B, L, H, hd), kv pre-repeated for GQA -> (B, L, H, hd)."""
+    b, lq, h, hd = q.shape
+    lk = k.shape[1]
+    scale = hd ** -0.5 if scale is None else float(scale)
+    bq, bk = pick_tiles(lq, lk, hd, q.dtype.itemsize)
+
+    def fold(x):  # (B, L, H, hd) -> (B*H, L, hd)
+        return x.transpose(0, 2, 1, 3).reshape(b * h, x.shape[1], hd)
+
+    qf, kf, vf = fold(q), fold(k), fold(v)
+    qp, kp = -lq % bq, -lk % bk
+    if qp:
+        qf = jnp.pad(qf, ((0, 0), (0, qp), (0, 0)))
+    if kp:
+        kf = jnp.pad(kf, ((0, 0), (0, kp), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, kp), (0, 0)))
+    lqp, lkp = lq + qp, lk + kp
+    n_kblocks = lkp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          bq=bq, bk=bk, n_kblocks=n_kblocks, seq_len=lk),
+        grid=(b * h, lqp // bq, n_kblocks),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda i, j, kk: (i, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda i, j, kk: (i, kk, 0)),
+            pl.BlockSpec((1, bk, hd), lambda i, j, kk: (i, kk, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda i, j, kk: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, lqp, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    out = out[:, :lq].reshape(b, h, lq, hd).transpose(0, 2, 1, 3)
+    return out

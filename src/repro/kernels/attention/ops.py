@@ -1,0 +1,14 @@
+"""Public op: causal flash attention (interpret=True on CPU)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.attention import kernel
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """q, k, v: (B, L, H, hd) -> (B, L, H, hd)."""
+    return kernel.flash_attention(q, k, v, causal=causal, scale=scale,
+                                  interpret=_INTERPRET)

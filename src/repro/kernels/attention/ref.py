@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for causal flash attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """q, k, v: (B, L, H, hd) (kv already head-repeated for GQA).
+    Returns (B, L, H, hd)."""
+    hd = q.shape[-1]
+    scale = hd ** -0.5 if scale is None else scale
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        lq, lk = q.shape[1], k.shape[1]
+        mask = jnp.tril(jnp.ones((lq, lk), bool))
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)

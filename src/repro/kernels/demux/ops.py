@@ -1,0 +1,20 @@
+"""Public op: fused index-embed demux (interpret=True on CPU).
+
+Falls back to the jnp reference when the shared MLP is not the fused-kernel
+2-layer shape (``demux_layers != 2``).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.demux import kernel, ref
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+def index_embed_demux(mlp_params, h, index_embeds):
+    """h: (B, L, d); index_embeds: (B, N, d) -> (B, N, L, d)."""
+    if set(mlp_params) != {"l0", "l1"}:
+        return ref.index_embed_demux(mlp_params, h, index_embeds)
+    return kernel.index_embed_demux(mlp_params, h, index_embeds,
+                                    interpret=_INTERPRET)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the fused index-embed demultiplexer (paper Sec 3.2).
+
+h^i_j = MLP_shared([h_j^{1:N} ; p^i]) with a 2-layer gelu MLP — exactly what
+``Demultiplexer.apply`` computes via SharedMLPStack on the materialised
+concat.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def index_embed_demux(mlp_params, h, index_embeds):
+    """mlp_params: SharedMLPStack dict {l0: {w (2d,H), b}, l1: {w (H,d), b}}.
+    h: (B, L, d); index_embeds: (B, N, d).  Returns (B, N, L, d)."""
+    b, l, d = h.shape
+    n = index_embeds.shape[1]
+    hb = jnp.broadcast_to(h[:, None], (b, n, l, d))
+    pb = jnp.broadcast_to(index_embeds[:, :, None], (b, n, l, d))
+    cat = jnp.concatenate([hb, pb], axis=-1)
+    w1 = mlp_params["l0"]["w"].astype(cat.dtype)
+    b1 = mlp_params["l0"]["b"].astype(cat.dtype)
+    w2 = mlp_params["l1"]["w"].astype(cat.dtype)
+    b2 = mlp_params["l1"]["b"].astype(cat.dtype)
+    z = jax.nn.gelu(cat @ w1 + b1)
+    return z @ w2 + b2

@@ -1,0 +1,13 @@
+"""Public op: fused Hadamard multiplexer (interpret=True on CPU)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.multiplex import kernel
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+def hadamard_mux(x, v):
+    """x: (B, N, L, d); v: (N, d) -> (B, L, d)."""
+    return kernel.hadamard_mux(x, v, interpret=_INTERPRET)

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the fused Hadamard multiplexer (paper Eq. 1)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def hadamard_mux(x, v):
+    """x: (B, N, L, d); v: (N, d) fixed Gaussian vectors.
+
+    Returns (B, L, d) = (1/N) Σ_i v^i ⊙ x^i  — token-wise Hadamard mux.
+    """
+    return jnp.mean(x * v[None, :, None, :].astype(x.dtype), axis=1)

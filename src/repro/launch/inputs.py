@@ -1,0 +1,93 @@
+"""ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+shardable, no device allocation (DESIGN.md §6).
+
+The DataMUX batch convention (paper semantics): an input shape's
+``global_batch`` counts INSTANCES; with multiplexing N, the backbone sees
+``B = ceil(global_batch / N)`` mixed streams.  ``decode`` shapes lower
+``serve_step`` — ONE new token against a ``seq_len`` cache — never
+``train_step``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import Backbone
+
+S = jax.ShapeDtypeStruct
+
+
+def backbone_batch(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    n = max(cfg.mux.n, 1)
+    return max(1, math.ceil(shape.global_batch / n))
+
+
+def token_struct(cfg: ModelConfig, shape: ShapeConfig):
+    b = backbone_batch(cfg, shape)
+    if cfg.mux.active:
+        return S((b, cfg.mux.n, shape.seq_len), jnp.int32)
+    return S((b, shape.seq_len), jnp.int32)
+
+
+def context_struct(cfg: ModelConfig, shape: ShapeConfig):
+    if not cfg.context_len:
+        return None
+    b = backbone_batch(cfg, shape)
+    return S((b, cfg.context_len, cfg.context_dim), cfg.compute_dtype)
+
+
+def train_inputs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, Any]:
+    batch = {"tokens": token_struct(cfg, shape)}
+    ctx = context_struct(cfg, shape)
+    if ctx is not None:
+        batch["context"] = ctx
+    return batch
+
+
+def prefill_inputs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, Any]:
+    return train_inputs(cfg, shape)
+
+
+def decode_inputs(cfg: ModelConfig, shape: ShapeConfig,
+                  *, len_multiple: int = 256) -> dict[str, Any]:
+    """serve_step operands: one token per stream + a seq_len KV cache.
+
+    max_len is rounded up to ``len_multiple`` so the cache sequence dim can
+    shard over the mesh when the (post-mux) batch cannot — without this a
+    prefix-lengthened cache (e.g. 32768 + N) replicates on every chip
+    (§Perf C2).  Unwritten slots carry pos = -1 and are masked out.
+    """
+    b = backbone_batch(cfg, shape)
+    n = cfg.mux.n
+    max_len = shape.seq_len + cfg.mux.prefix_len
+    max_len += -max_len % len_multiple
+    cache = jax.eval_shape(
+        lambda: Backbone.init_cache(cfg, b, max_len, cfg.compute_dtype))
+    out = {
+        "tokens": S((b, n), jnp.int32) if cfg.mux.active else S((b,), jnp.int32),
+        "cache": cache,
+        "pos": S((), jnp.int32),
+    }
+    if cfg.mux.active and cfg.mux.demux == "index_embed":
+        out["index_embeds"] = S((b, n, cfg.d_model), cfg.compute_dtype)
+    ctx = context_struct(cfg, shape)
+    if ctx is not None:
+        # cross-attn K/V are precomputed once per request
+        out["cross_kv"] = jax.eval_shape(
+            lambda p, c: Backbone.encode_context(p, c, cfg),
+            param_struct(cfg), ctx)
+    return out
+
+
+def state_struct(cfg: ModelConfig, make_state):
+    """ShapeDtypeStruct pytree of the full train state, no allocation."""
+    return jax.eval_shape(make_state)
+
+
+def param_struct(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda: Backbone.init(jax.random.PRNGKey(0), cfg))

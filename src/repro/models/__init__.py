@@ -1,0 +1,5 @@
+"""Model families for the assigned architectures, all interpreted from
+ModelConfig by the generic pattern-scanned backbone."""
+from repro.models.backbone import Backbone
+
+__all__ = ["Backbone"]

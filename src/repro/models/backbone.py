@@ -1,0 +1,472 @@
+"""Generic pattern-scanned decoder backbone.
+
+One model implementation interprets every assigned architecture's
+ModelConfig:
+
+  * layer heterogeneity (MoE interleave, Jamba attn:Mamba 1:7, Gemma-3
+    5-local:1-global windows, xLSTM mLSTM/sLSTM mix, VLM cross-attention
+    insertion) is compiled by ``ModelConfig.layer_pattern()`` into
+    (head, period, groups): ``head`` unscanned layers, then ``groups``
+    repeats of a ``period``-layer super-block run under ``jax.lax.scan``
+    (stacked params ⇒ HLO size independent of depth), then an unscanned tail.
+  * DataMUX (the paper's technique) is integrated natively: token embedding →
+    prefix protocol → Multiplexer → blocks → Demultiplexer → per-instance
+    logits.  ``cfg.mux.n == 1`` degrades to a vanilla LM.
+  * Decode mode threads per-layer caches (KV / ring-buffer / MLA-latent /
+    SSM state) through the same scan.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MuxConfig
+from repro.core.demultiplexer import Demultiplexer
+from repro.core.multiplexer import Multiplexer
+from repro.nn.attention import MLA, Attention, CrossAttention
+from repro.nn.layers import Embedding, Linear, MLP, make_norm
+from repro.nn.moe import SINGLE, MeshInfo, MoE
+from repro.nn.ssm import MLSTM, Mamba, SLSTM
+
+Params = Any
+
+
+def _constrain(x, mesh, spec):
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init / apply
+# ---------------------------------------------------------------------------
+
+def _layer_init(key, cfg: ModelConfig, kind: dict):
+    keys = jax.random.split(key, 6)
+    norm = make_norm(cfg.norm)
+    pdtype = cfg.pdtype
+    p: dict = {"norm1": norm.init(keys[0], cfg.d_model, param_dtype=pdtype)}
+    mixer = kind["mixer"]
+    if mixer == "attn":
+        p["attn"] = Attention.init(
+            keys[1], cfg.attn_config(window=kind["window"]),
+            param_dtype=pdtype)
+    elif mixer == "mla":
+        p["attn"] = MLA.init(keys[1], cfg.mla, param_dtype=pdtype)
+    elif mixer == "mamba":
+        p["mamba"] = Mamba.init(keys[1], cfg.mamba, param_dtype=pdtype)
+    elif mixer == "mlstm":
+        p["mlstm"] = MLSTM.init(keys[1], cfg.xlstm, param_dtype=pdtype)
+    elif mixer == "slstm":
+        p["slstm"] = SLSTM.init(keys[1], cfg.xlstm, param_dtype=pdtype)
+    else:
+        raise ValueError(mixer)
+    if kind["cross"]:
+        p["norm_x"] = norm.init(keys[2], cfg.d_model, param_dtype=pdtype)
+        p["cross"] = CrossAttention.init(
+            keys[3], cfg.attn_config(), kv_dim=cfg.context_dim or cfg.d_model,
+            param_dtype=pdtype)
+        p["cross_gate"] = jnp.zeros((), pdtype)  # llama-3.2 style tanh gate
+    if kind["mlp"] == "dense":
+        p["norm2"] = norm.init(keys[4], cfg.d_model, param_dtype=pdtype)
+        p["mlp"] = MLP.init(keys[5], cfg.d_model, cfg.d_ff,
+                            gated=cfg.gated_mlp, param_dtype=pdtype)
+    elif kind["mlp"] == "moe":
+        p["norm2"] = norm.init(keys[4], cfg.d_model, param_dtype=pdtype)
+        p["moe"] = MoE.init(keys[5], cfg.moe, param_dtype=pdtype)
+    return p
+
+
+def _layer_cache(cfg: ModelConfig, kind: dict, batch: int, max_len: int,
+                 dtype):
+    mixer = kind["mixer"]
+    if mixer == "attn":
+        return Attention.init_cache(cfg.attn_config(window=kind["window"]),
+                                    batch, max_len, dtype)
+    if mixer == "mla":
+        return MLA.init_cache(cfg.mla, batch, max_len, dtype)
+    if mixer == "mamba":
+        return Mamba.init_cache(cfg.mamba, batch, dtype)
+    if mixer == "mlstm":
+        return MLSTM.init_cache(cfg.xlstm, batch)
+    if mixer == "slstm":
+        return SLSTM.init_cache(cfg.xlstm, batch)
+    raise ValueError(mixer)
+
+
+def _layer_apply(p, x, cfg: ModelConfig, kind: dict, *, positions,
+                 cache=None, cache_index=None, cross_kv=None,
+                 mesh=None, mesh_info: MeshInfo = SINGLE):
+    norm = make_norm(cfg.norm)
+    mixer = kind["mixer"]
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = None
+    h = norm.apply(p["norm1"], x)
+    if mixer == "attn":
+        out, new_cache = Attention.apply(
+            p["attn"], h, cfg.attn_config(window=kind["window"]),
+            positions=positions, cache=cache, cache_index=cache_index)
+    elif mixer == "mla":
+        out, new_cache = MLA.apply(p["attn"], h, cfg.mla, positions=positions,
+                                   cache=cache, cache_index=cache_index)
+    elif mixer == "mamba":
+        out, new_cache = Mamba.apply(p["mamba"], h, cfg.mamba, cache=cache)
+    elif mixer == "mlstm":
+        out, new_cache = MLSTM.apply(p["mlstm"], h, cfg.xlstm, cache=cache)
+    elif mixer == "slstm":
+        out, new_cache = SLSTM.apply(p["slstm"], h, cfg.xlstm, cache=cache)
+    else:
+        raise ValueError(mixer)
+    x = x + out
+
+    if kind["cross"]:
+        assert cross_kv is not None, "cross-attn layer needs context kv"
+        h = norm.apply(p["norm_x"], x)
+        out = CrossAttention.apply(p["cross"], h, cross_kv, cfg.attn_config())
+        x = x + jnp.tanh(p["cross_gate"].astype(x.dtype)) * out
+
+    if kind["mlp"] == "dense":
+        h = norm.apply(p["norm2"], x)
+        x = x + MLP.apply(p["mlp"], h, activation=cfg.activation)
+    elif kind["mlp"] == "moe":
+        h = norm.apply(p["norm2"], x)
+        out, aux = MoE.apply(p["moe"], h, cfg.moe, mesh_info, mesh=mesh)
+        x = x + out
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Backbone
+# ---------------------------------------------------------------------------
+
+class Backbone:
+    # -- init -------------------------------------------------------------------
+
+    @staticmethod
+    def init(key, cfg: ModelConfig) -> Params:
+        keys = jax.random.split(key, 8)
+        kinds = cfg.layer_kinds()
+        head, period, groups = cfg.layer_pattern()
+        pdtype = cfg.pdtype
+        norm = make_norm(cfg.norm)
+
+        params: dict = {
+            "embed": Embedding.init(keys[0], cfg.vocab, cfg.d_model,
+                                    param_dtype=pdtype),
+            "final_norm": norm.init(keys[1], cfg.d_model, param_dtype=pdtype),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = Linear.init(keys[2], cfg.d_model, cfg.vocab,
+                                            param_dtype=pdtype)
+        if cfg.mux.active:
+            params["mux"] = Multiplexer.init(keys[3], cfg.mux, cfg.d_model,
+                                             param_dtype=pdtype)
+            params["demux"] = Demultiplexer.init(keys[4], cfg.mux, cfg.d_model,
+                                                 param_dtype=pdtype)
+
+        lkeys = jax.random.split(keys[5], cfg.n_layers)
+        params["head_layers"] = [
+            _layer_init(lkeys[i], cfg, kinds[i]) for i in range(head)]
+        # scanned pattern: per pattern-position params stacked over groups
+        blocks = []
+        for j in range(period if groups else 0):
+            idx = jnp.array([head + g * period + j for g in range(groups)])
+            gkeys = lkeys[idx]
+            blocks.append(jax.vmap(
+                lambda k, kd=kinds[head + j]: _layer_init(k, cfg, kd))(gkeys))
+        params["blocks"] = blocks
+        tail_start = head + period * groups
+        params["tail_layers"] = [
+            _layer_init(lkeys[i], cfg, kinds[i])
+            for i in range(tail_start, cfg.n_layers)]
+
+        if cfg.encoder is not None:
+            params["encoder"] = Backbone.init_encoder(keys[6], cfg.encoder)
+        return params
+
+    @staticmethod
+    def init_encoder(key, enc_cfg: ModelConfig):
+        """Encoder stack (whisper): blocks only, input is stub embeddings."""
+        kinds = enc_cfg.layer_kinds()
+        lkeys = jax.random.split(key, enc_cfg.n_layers + 1)
+        norm = make_norm(enc_cfg.norm)
+        return {
+            "layers": [
+                _layer_init(lkeys[i], enc_cfg, kinds[i])
+                for i in range(enc_cfg.n_layers)],
+            "final_norm": norm.init(lkeys[-1], enc_cfg.d_model,
+                                    param_dtype=enc_cfg.pdtype),
+        }
+
+    # -- caches -----------------------------------------------------------------
+
+    @staticmethod
+    def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=None) -> Params:
+        dtype = dtype or cfg.compute_dtype
+        kinds = cfg.layer_kinds()
+        head, period, groups = cfg.layer_pattern()
+        cache: dict = {
+            "head": [_layer_cache(cfg, kinds[i], batch, max_len, dtype)
+                     for i in range(head)],
+            "blocks": [
+                jax.tree.map(
+                    lambda a: jnp.broadcast_to(a, (groups,) + a.shape).copy()
+                    if hasattr(a, "shape") else a,
+                    _layer_cache(cfg, kinds[head + j], batch, max_len, dtype))
+                for j in range(period if groups else 0)],
+            "tail": [_layer_cache(cfg, kinds[i], batch, max_len, dtype)
+                     for i in range(head + period * groups, cfg.n_layers)],
+        }
+        return cache
+
+    # -- context (stub multimodal frontend / encoder) -----------------------------
+
+    @staticmethod
+    def encode_context(params, context, cfg: ModelConfig, *, mesh=None,
+                       mesh_info: MeshInfo = SINGLE):
+        """context: (B, Lc, context_dim) stub embeddings -> cross-attn K/V per
+        cross layer.  For enc-dec (whisper) the encoder stack runs first."""
+        kinds = cfg.layer_kinds()
+        ctx = context.astype(cfg.compute_dtype)
+        if cfg.encoder is not None:
+            enc = params["encoder"]
+            ecfg = cfg.encoder
+            ekinds = ecfg.layer_kinds()
+            x = ctx
+            pos = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+            for i, lp in enumerate(enc["layers"]):
+                x, _, _ = _layer_apply(lp, x, ecfg, ekinds[i], positions=pos,
+                                       mesh=mesh, mesh_info=mesh_info)
+            ctx = make_norm(ecfg.norm).apply(enc["final_norm"], x)
+
+        head, period, groups = cfg.layer_pattern()
+        acfg = cfg.attn_config()
+
+        def precompute(lp):
+            return CrossAttention.precompute_kv(lp["cross"], ctx, acfg)
+
+        kv = {"head": {}, "blocks": {}, "tail": {}}
+        for i in range(head):
+            if kinds[i]["cross"]:
+                kv["head"][i] = precompute(params["head_layers"][i])
+        for j in range(period if groups else 0):
+            if kinds[head + j]["cross"]:
+                kv["blocks"][j] = jax.vmap(precompute)(params["blocks"][j])
+        tail_start = head + period * groups
+        for i in range(tail_start, cfg.n_layers):
+            if kinds[i]["cross"]:
+                kv["tail"][i - tail_start] = precompute(
+                    params["tail_layers"][i - tail_start])
+        return kv
+
+    # -- block runner --------------------------------------------------------------
+
+    @staticmethod
+    def _run_blocks(params, x, cfg: ModelConfig, *, positions, cache=None,
+                    cache_index=None, cross_kv=None, mesh=None,
+                    mesh_info: MeshInfo = SINGLE):
+        kinds = cfg.layer_kinds()
+        head, period, groups = cfg.layer_pattern()
+        aux_total = jnp.zeros((), jnp.float32)
+        new_cache: Optional[dict] = None if cache is None else \
+            {"head": [], "blocks": [], "tail": []}
+
+        sp_spec = None
+        if (cfg.seq_parallel and mesh is not None and
+                cfg.d_model % max(mesh_info.model_size, 1) == 0):
+            bat, seq = mesh_info.bl_entries(x.shape[0], x.shape[1])
+            sp_spec = jax.sharding.PartitionSpec(bat, seq,
+                                                 mesh_info.model_axis)
+
+        def run_one(lp, x, kind, lcache, ckv):
+            x, nc, aux = _layer_apply(lp, x, cfg, kind, positions=positions,
+                                      cache=lcache, cache_index=cache_index,
+                                      cross_kv=ckv, mesh=mesh,
+                                      mesh_info=mesh_info)
+            if sp_spec is not None:
+                x = _constrain(x, mesh, sp_spec)
+            return x, nc, aux
+
+        # head (unscanned)
+        for i in range(head):
+            lc = cache["head"][i] if cache is not None else None
+            ckv = (cross_kv or {}).get("head", {}).get(i)
+            x, nc, aux = run_one(params["head_layers"][i], x, kinds[i], lc, ckv)
+            aux_total = aux_total + aux
+            if new_cache is not None:
+                new_cache["head"].append(nc)
+
+        # scanned groups
+        if groups:
+            def group_body(x, sliced):
+                lps, lcs, ckvs = sliced
+                aux_g = jnp.zeros((), jnp.float32)
+                ncs = []
+                for j in range(period):
+                    x, nc, aux = run_one(lps[j], x, kinds[head + j],
+                                         lcs[j] if lcs is not None else None,
+                                         ckvs.get(j) if ckvs else None)
+                    aux_g = aux_g + aux
+                    ncs.append(nc)
+                return x, (ncs if lcs is not None else None, aux_g)
+
+            if cfg.remat == "full":
+                group_body = jax.checkpoint(group_body)
+            elif cfg.remat == "dots":
+                group_body = jax.checkpoint(
+                    group_body,
+                    policy=jax.checkpoint_policies
+                    .dots_with_no_batch_dims_saveable)
+
+            stacked_lps = params["blocks"]  # list over pattern positions
+            stacked_lcs = cache["blocks"] if cache is not None else None
+            block_ckvs = (cross_kv or {}).get("blocks", {}) or None
+            x, (ncs, aux_g) = jax.lax.scan(
+                group_body, x,
+                (stacked_lps,
+                 stacked_lcs if stacked_lcs is not None else
+                 [None] * period if period else None,
+                 {j: v for j, v in (block_ckvs or {}).items()}))
+            aux_total = aux_total + jnp.sum(aux_g)
+            if new_cache is not None:
+                new_cache["blocks"] = ncs
+
+        # tail (unscanned)
+        tail_start = head + period * groups
+        for t, i in enumerate(range(tail_start, cfg.n_layers)):
+            lc = cache["tail"][t] if cache is not None else None
+            ckv = (cross_kv or {}).get("tail", {}).get(t)
+            x, nc, aux = run_one(params["tail_layers"][t], x, kinds[i], lc, ckv)
+            aux_total = aux_total + aux
+            if new_cache is not None:
+                new_cache["tail"].append(nc)
+
+        x = make_norm(cfg.norm).apply(params["final_norm"], x)
+        return x, new_cache, aux_total
+
+    # -- embedding / logits ----------------------------------------------------------
+
+    @staticmethod
+    def embed(params, tokens, cfg: ModelConfig):
+        return Embedding.apply(params["embed"], tokens,
+                               dtype=cfg.compute_dtype)
+
+    @staticmethod
+    def logits(params, h, cfg: ModelConfig):
+        if cfg.tie_embeddings:
+            out = Embedding.attend(params["embed"], h)
+        else:
+            out = Linear.apply(params["lm_head"], h)
+        if cfg.logits_softcap:
+            c = cfg.logits_softcap
+            out = c * jnp.tanh(out / c)
+        return out
+
+    # -- full-sequence forward (train / prefill) ----------------------------------
+
+    @staticmethod
+    def apply(params, tokens, cfg: ModelConfig, *, context=None, mesh=None,
+              mesh_info: MeshInfo = SINGLE, cache=None,
+              last_only: bool = False):
+        """tokens: (B, N, L) when mux active else (B, L).
+
+        Returns dict(hidden, demuxed, logits, index_embeds, aux, cache).
+        ``demuxed``/``logits`` are (B, N, L, ·) when mux active else (B, L, ·).
+        Passing a fresh ``cache`` turns this into a prefill: the cache comes
+        back filled (KV / ring / latent / SSM state) ready for decode_step.
+
+        ``last_only``: serving prefill — demux + logits for the final
+        position only.  The demultiplexer expands activations N-fold (the
+        one place DataMUX pays an N× cost); at 32k prefill that tensor
+        dominates the memory AND collective roofline terms (§Perf A5), and
+        next-token serving never needs it.
+        """
+        mux = cfg.mux
+        cross_kv = None
+        if context is not None:
+            cross_kv = Backbone.encode_context(params, context, cfg,
+                                               mesh=mesh, mesh_info=mesh_info)
+        if mux.active:
+            b, n, l = tokens.shape
+            emb = Backbone.embed(params, tokens, cfg)  # (B, N, L, d)
+            p = mux.prefix_len
+            if p:
+                pre = Demultiplexer.prefix_embeddings(
+                    params["demux"], mux, emb.dtype)  # (N, P, d)
+                pre = jnp.broadcast_to(pre[None], (b, n, p, emb.shape[-1]))
+                emb = jnp.concatenate([pre, emb], axis=2)
+            x = Multiplexer.apply(params["mux"], emb, mux)  # (B, P+L, d)
+        else:
+            b, l = tokens.shape
+            p = 0
+            x = Backbone.embed(params, tokens, cfg)
+
+        bat, seq = mesh_info.bl_entries(x.shape[0], x.shape[1])
+        x = _constrain(x, mesh, jax.sharding.PartitionSpec(bat, seq, None))
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1]), (b, x.shape[1]))
+        h, new_cache, aux = Backbone._run_blocks(
+            params, x, cfg, positions=positions, cross_kv=cross_kv,
+            cache=cache, mesh=mesh, mesh_info=mesh_info)
+
+        out = {"hidden": h, "aux": aux, "index_embeds": None,
+               "cache": new_cache}
+        if mux.active:
+            if mux.demux == "index_embed":
+                index_embeds = h[:, :mux.n]       # p^i = h at prefix pos i
+                h_rest = h[:, p:]                 # drop padding positions too
+            else:
+                index_embeds = None
+                h_rest = h
+            if last_only:
+                h_rest = h_rest[:, -1:]
+            demuxed = Demultiplexer.apply(params["demux"], h_rest, mux,
+                                          index_embeds=index_embeds)
+            out["demuxed"] = demuxed
+            out["index_embeds"] = index_embeds
+            out["logits"] = Backbone.logits(params, demuxed, cfg)
+        else:
+            out["demuxed"] = h[:, -1:] if last_only else h
+            out["logits"] = Backbone.logits(params, out["demuxed"], cfg)
+        return out
+
+    # -- single-token decode (serving) ---------------------------------------------
+
+    @staticmethod
+    def decode_step(params, tokens, cache, cache_index, cfg: ModelConfig, *,
+                    index_embeds=None, cross_kv=None, mesh=None,
+                    mesh_info: MeshInfo = SINGLE):
+        """One decode step.
+
+        tokens: (B, N) last generated token per stream when mux active,
+        else (B,).  cache_index: scalar int32 — absolute position (including
+        the prefix) being written.  Returns (logits, new_cache):
+        logits (B, N, vocab) when mux active else (B, vocab).
+        """
+        mux = cfg.mux
+        if mux.active:
+            b, n = tokens.shape
+            emb = Backbone.embed(params, tokens[:, :, None], cfg)  # (B,N,1,d)
+            x = Multiplexer.apply(params["mux"], emb, mux)         # (B,1,d)
+        else:
+            b = tokens.shape[0]
+            x = Backbone.embed(params, tokens[:, None], cfg)       # (B,1,d)
+
+        positions = jnp.broadcast_to(
+            jnp.asarray(cache_index, jnp.int32), (b, 1))
+        h, new_cache, _ = Backbone._run_blocks(
+            params, x, cfg, positions=positions, cache=cache,
+            cache_index=cache_index, cross_kv=cross_kv, mesh=mesh,
+            mesh_info=mesh_info)
+
+        if mux.active:
+            demuxed = Demultiplexer.apply(
+                params["demux"], h, mux, index_embeds=index_embeds)
+            logits = Backbone.logits(params, demuxed[:, :, 0], cfg)  # (B,N,V)
+        else:
+            logits = Backbone.logits(params, h[:, 0], cfg)           # (B,V)
+        return logits, new_cache

@@ -1,0 +1,181 @@
+"""MLP / CNN multiplexing on image classification (paper Sec 5, A.10, A.11).
+
+The paper's image models, in JAX:
+  * MLP: 100-hidden-unit net; demux layer maps hidden -> N groups of
+    ``group`` units; a SHARED linear readout maps each group to n_classes.
+  * CNN: LeNet-style (10@3x3 -> pool -> 16@4x4 -> pool -> 120@3x3) -> 84
+    hidden; same demux + shared-readout structure.
+
+Multiplexing strategies (Fig 7a / Fig 11): "identity" (order-unidentifiable
+baseline), "ortho" SO(d), "lowrank" (A.10), and "nonlinear" — N small
+two-layer conv nets with tanh whose activation maps are summed (the CNN's
+best; A.11).  All operate on flattened pixels except "nonlinear", which is
+spatial.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import initializers
+
+Params = dict
+
+
+@dataclasses.dataclass(frozen=True)
+class ImageMuxConfig:
+    n: int = 1
+    strategy: str = "ortho"      # identity | ortho | lowrank | nonlinear
+    size: int = 20               # image side (paper crops to 20x20)
+    n_classes: int = 10
+    hidden: int = 100            # MLP hidden width
+    group: int = 20              # per-index demux group width (MLP; CNN: 84)
+    conv_maps: int = 16          # nonlinear-mux conv channels
+
+    @property
+    def d(self) -> int:
+        return self.size * self.size
+
+
+# ---------------------------------------------------------------------------
+# multiplexing transforms on images
+# ---------------------------------------------------------------------------
+
+def init_image_mux(key, cfg: ImageMuxConfig):
+    n, d = cfg.n, cfg.d
+    if cfg.strategy == "identity" or n == 1:
+        return {}
+    if cfg.strategy == "ortho":
+        keys = jax.random.split(key, n)
+        return {"o": jnp.stack([initializers.random_orthogonal(k, d)
+                                for k in keys])}
+    if cfg.strategy == "lowrank":
+        k1, k2 = jax.random.split(key)
+        return {"u": initializers.random_orthogonal(k1, d),
+                "q": initializers.random_orthogonal(k2, d)}
+    if cfg.strategy == "nonlinear":
+        # N two-layer 3x3 conv nets, tanh, summed single activation map
+        keys = jax.random.split(key, 2 * n)
+        c = cfg.conv_maps
+        w1 = jnp.stack([0.3 * jax.random.normal(keys[2 * i], (3, 3, 1, c))
+                        for i in range(n)])
+        w2 = jnp.stack([0.3 * jax.random.normal(keys[2 * i + 1], (3, 3, c, 1))
+                        for i in range(n)])
+        return {"w1": w1, "w2": w2}
+    raise ValueError(cfg.strategy)
+
+
+def apply_image_mux(params, x, cfg: ImageMuxConfig):
+    """x: (B, N, H, W) -> mixed (B, H*W) (or (B, H, W) for nonlinear)."""
+    b, n, hh, ww = x.shape
+    flat = x.reshape(b, n, -1)
+    if cfg.strategy == "identity" or n == 1:
+        return jnp.mean(flat, axis=1)
+    if cfg.strategy == "ortho":
+        o = jax.lax.stop_gradient(params["o"])
+        return jnp.mean(jnp.einsum("bnd,nde->bne", flat, o), axis=1)
+    if cfg.strategy == "lowrank":
+        u = jax.lax.stop_gradient(params["u"])
+        q = jax.lax.stop_gradient(params["q"])
+        r = u.shape[0] // n
+        ui = u[: n * r].reshape(n, r, -1)
+        proj = jnp.einsum("bnd,nrd->bnr", flat, ui)
+        back = jnp.einsum("bnr,nrd->bnd", proj, ui)
+        return jnp.mean(back @ q, axis=1)
+    if cfg.strategy == "nonlinear":
+        def conv(img, w):
+            return jax.lax.conv_general_dilated(
+                img, w, (1, 1), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        acc = 0.0
+        for i in range(n):  # learned mux nets (paper A.11 "Nonlinear")
+            z = jnp.tanh(conv(x[:, i, :, :, None], params["w1"][i]))
+            acc = acc + jnp.tanh(conv(z, params["w2"][i]))[..., 0]
+        return (acc / n).reshape(b, -1)
+    raise ValueError(cfg.strategy)
+
+
+# ---------------------------------------------------------------------------
+# MLP (paper A.10)
+# ---------------------------------------------------------------------------
+
+class MuxMLP:
+    @staticmethod
+    def init(key, cfg: ImageMuxConfig) -> Params:
+        k0, k1, k2, k3 = jax.random.split(key, 4)
+        h, g, n = cfg.hidden, cfg.group, cfg.n
+        return {
+            "mux": init_image_mux(k0, cfg),
+            "w1": 0.05 * jax.random.normal(k1, (cfg.d, h)),
+            "b1": jnp.zeros((h,)),
+            "demux": 0.05 * jax.random.normal(k2, (h, n * g)),
+            "bdemux": jnp.zeros((n * g,)),
+            "readout": 0.05 * jax.random.normal(k3, (g, cfg.n_classes)),
+        }
+
+    @staticmethod
+    def apply(params, images, cfg: ImageMuxConfig):
+        """images: (B, N, H, W) -> logits (B, N, n_classes)."""
+        b, n = images.shape[:2]
+        x = apply_image_mux(params["mux"], images, cfg)      # (B, d)
+        h = jnp.tanh(x @ params["w1"] + params["b1"])
+        z = jnp.tanh(h @ params["demux"] + params["bdemux"])  # (B, N*g)
+        z = z.reshape(b, n, cfg.group)
+        return z @ params["readout"]                          # shared head
+
+
+# ---------------------------------------------------------------------------
+# CNN (paper A.10: LeNet-ish)
+# ---------------------------------------------------------------------------
+
+class MuxCNN:
+    @staticmethod
+    def init(key, cfg: ImageMuxConfig) -> Params:
+        ks = jax.random.split(key, 7)
+        n, g = cfg.n, 84
+        return {
+            "mux": init_image_mux(ks[0], cfg),
+            "c1": 0.3 * jax.random.normal(ks[1], (3, 3, 1, 10)),
+            "c2": 0.3 * jax.random.normal(ks[2], (4, 4, 10, 16)),
+            "c3": 0.3 * jax.random.normal(ks[3], (3, 3, 16, 120)),
+            "w": 0.05 * jax.random.normal(ks[4], (120 * 25, g)),  # 5x5 tail
+            "b": jnp.zeros((g,)),
+            "demux": 0.05 * jax.random.normal(ks[5], (g, n * g)),
+            "bdemux": jnp.zeros((n * g,)),
+            "readout": 0.05 * jax.random.normal(ks[6], (g, cfg.n_classes)),
+        }
+
+    @staticmethod
+    def apply(params, images, cfg: ImageMuxConfig):
+        """images: (B, N, H, W) -> logits (B, N, n_classes)."""
+        b, n = images.shape[:2]
+        x = apply_image_mux(params["mux"], images, cfg).reshape(
+            b, cfg.size, cfg.size, 1)
+
+        def conv(img, w):
+            return jax.lax.conv_general_dilated(
+                img, w, (1, 1), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+        def pool(z):
+            return jax.lax.reduce_window(z, -jnp.inf, jax.lax.max,
+                                         (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+        z = pool(jnp.tanh(conv(x, params["c1"])))            # 10x10
+        z = pool(jnp.tanh(conv(z, params["c2"])))            # 5x5
+        z = jnp.tanh(conv(z, params["c3"])).reshape(b, -1)   # 120*25
+        h = jnp.tanh(z @ params["w"] + params["b"])          # (B, 84)
+        zz = jnp.tanh(h @ params["demux"] + params["bdemux"])
+        zz = zz.reshape(b, n, 84)
+        return zz @ params["readout"]
+
+
+def image_loss(logits, labels):
+    """Paper A.10 uses tanh targets + MSE; CE is the modern equivalent that
+    trains faster at the same scale — we use CE and note the change."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return jnp.mean(nll), acc

@@ -1,0 +1,30 @@
+"""Pure-JAX neural-network substrate (no flax/optax dependency).
+
+Modules follow a functional init/apply convention:
+    params = thing_init(key, cfg...)
+    y      = thing_apply(params, x, ...)
+Params are nested dicts of jnp arrays so they remain ordinary pytrees for
+pjit / optimizers / checkpointing.
+"""
+from repro.nn import activations, attention, initializers, layers, moe, ssm
+from repro.nn.layers import (
+    Linear,
+    Embedding,
+    RMSNorm,
+    LayerNorm,
+    MLP,
+)
+
+__all__ = [
+    "activations",
+    "attention",
+    "initializers",
+    "layers",
+    "moe",
+    "ssm",
+    "Linear",
+    "Embedding",
+    "RMSNorm",
+    "LayerNorm",
+    "MLP",
+]

@@ -1,0 +1,42 @@
+"""Activation functions used across the assigned architecture families."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def silu(x):
+    return jax.nn.silu(x)
+
+
+def relu(x):
+    return jax.nn.relu(x)
+
+
+def squared_relu(x):
+    """Squared ReLU — Nemotron-4 FFN activation (arXiv:2402.16819)."""
+    r = jax.nn.relu(x)
+    return r * r
+
+
+def tanh(x):
+    return jnp.tanh(x)
+
+
+ACTIVATIONS = {
+    "gelu": gelu,
+    "silu": silu,
+    "relu": relu,
+    "squared_relu": squared_relu,
+    "tanh": tanh,
+}
+
+
+def get(name: str):
+    if name not in ACTIVATIONS:
+        raise ValueError(f"unknown activation {name!r}; have {sorted(ACTIVATIONS)}")
+    return ACTIVATIONS[name]

@@ -1,0 +1,507 @@
+"""Attention variants for the assigned architecture families.
+
+Covers: MHA / GQA / MQA (n_kv_heads), RoPE, sliding-window (ring-buffer KV
+cache), cross-attention (VLM / enc-dec), and DeepSeek-style MLA with a
+compressed latent KV cache.  Every variant supports two modes:
+
+  * full-sequence (training / prefill):  ``cache is None``
+  * single-token decode:                 ``cache`` holds the KV state and the
+                                         write index.
+
+KV caches are plain dict pytrees so they shard/pjit like everything else.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import Linear
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    dim: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    causal: bool = True
+    window: Optional[int] = None  # sliding-window size; None = full attention
+    use_flash: bool = False  # route prefill through the Pallas flash kernel
+    softmax_scale: Optional[float] = None
+
+    @property
+    def scale(self) -> float:
+        return self.softmax_scale if self.softmax_scale is not None \
+            else self.head_dim ** -0.5
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., L, H, head_dim); positions: broadcastable to (..., L)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)  # (half,)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (..., L, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., L, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Core soft-max attention
+# ---------------------------------------------------------------------------
+
+def _repeat_kv(k, n_rep: int):
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)) \
+        .reshape(b, s, h * n_rep, d)
+
+
+def dot_product_attention(q, k, v, mask, scale: float):
+    """q: (B, Lq, H, hd)  k,v: (B, Lk, H, hd)  mask: (B, 1, Lq, Lk) bool."""
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+# Beyond-paper §Perf lever: above this many keys the full (B, H, Lq, Lk)
+# f32 score tensor dominates the memory roofline term (e.g. 32k prefill:
+# hundreds of GB/device); switch to the chunked online-softmax form.
+CHUNKED_ATTN_THRESHOLD = 8192
+CHUNK_SIZE = 1024
+
+
+def chunked_dot_product_attention(q, k, v, q_pos, k_pos, scale: float, *,
+                                  causal: bool, window: Optional[int],
+                                  k_valid=None, chunk: int = CHUNK_SIZE):
+    """Flash-style attention in pure XLA: lax.scan over KV chunks with a
+    running (max, sum, acc) — O(Lq·chunk) live scores instead of O(Lq·Lk).
+    Lowers on every backend (the Pallas kernel is the TPU-tuned variant).
+
+    q: (B, Lq, H, hd); k, v: (B, Lk, H, hd); q_pos (B, Lq); k_pos (B, Lk).
+    """
+    b, lq, h, hd_k = q.shape
+    hd_v = v.shape[-1]
+    lk = k.shape[1]
+    pad = -lk % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1)
+        valid_pad = jnp.pad(
+            k_valid if k_valid is not None
+            else jnp.ones((b, lk), bool), ((0, 0), (0, pad)))
+    else:
+        valid_pad = k_valid if k_valid is not None \
+            else jnp.ones((b, lk), bool)
+    n_chunks = (lk + pad) // chunk
+
+    kc = k.reshape(b, n_chunks, chunk, h, hd_k).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, h, hd_v).transpose(1, 0, 2, 3, 4)
+    pc = k_pos.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+    mc = valid_pad.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+
+    qf = q.astype(jnp.float32)
+
+    def body(carry, xs):
+        m_run, l_run, acc = carry                    # (B,H,Lq,1) ×2, (B,Lq,H,hd)
+        kb, vb, pb, mb = xs                           # (B,C,H,hd), …, (B,C)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf,
+                       kb.astype(jnp.float32)) * scale   # (B,H,Lq,C)
+        diff = q_pos[:, None, :, None] - pb[:, None, None, :]
+        keep = mb[:, None, None, :]
+        if causal:
+            keep = keep & (diff >= 0)
+        if window is not None:
+            keep = keep & (diff < window)
+        s = jnp.where(keep, s, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_run - m_new)                # (B,H,Lq,1)
+        p = jnp.exp(s - m_new)                        # (B,H,Lq,C)
+        l_new = l_run * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        upd = jnp.einsum("bhqk,bkhd->bqhd", p, vb.astype(jnp.float32))
+        acc = acc * alpha.transpose(0, 2, 1, 3) + upd   # (B,Lq,H,1) bcast
+        return (m_new, l_new, acc), None
+
+    init = (jnp.full((b, h, lq, 1), NEG_INF, jnp.float32),
+            jnp.zeros((b, h, lq, 1), jnp.float32),
+            jnp.zeros((b, lq, h, hd_v), jnp.float32))
+    (m_run, l_run, acc), _ = jax.lax.scan(body, init, (kc, vc, pc, mc))
+    denom = jnp.maximum(l_run, 1e-30).transpose(0, 2, 1, 3)  # (B,Lq,H,1)
+    return (acc / denom).astype(v.dtype)
+
+
+def make_attention_mask(q_pos, k_pos, *, causal: bool, window: Optional[int],
+                        k_valid=None):
+    """Boolean (B, 1, Lq, Lk) mask from query/key positions.
+
+    q_pos: (B, Lq) int; k_pos: (B, Lk) int; k_valid: optional (B, Lk) bool for
+    ring-buffer slots that have not been written yet.
+    """
+    diff = q_pos[:, :, None] - k_pos[:, None, :]  # (B, Lq, Lk)
+    m = jnp.ones_like(diff, dtype=bool)
+    if causal:
+        m &= diff >= 0
+    if window is not None:
+        m &= diff < window
+    if k_valid is not None:
+        m &= k_valid[:, None, :]
+    return m[:, None, :, :]
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block
+# ---------------------------------------------------------------------------
+
+class Attention:
+    """GQA/MQA/MHA with RoPE and optional sliding window."""
+
+    @staticmethod
+    def init(key, cfg: AttnConfig, *, param_dtype=jnp.float32):
+        keys = jax.random.split(key, 4)
+        return {
+            "wq": Linear.init(keys[0], cfg.dim, cfg.n_heads * cfg.head_dim,
+                              use_bias=cfg.qkv_bias, param_dtype=param_dtype),
+            "wk": Linear.init(keys[1], cfg.dim, cfg.n_kv_heads * cfg.head_dim,
+                              use_bias=cfg.qkv_bias, param_dtype=param_dtype),
+            "wv": Linear.init(keys[2], cfg.dim, cfg.n_kv_heads * cfg.head_dim,
+                              use_bias=cfg.qkv_bias, param_dtype=param_dtype),
+            "wo": Linear.init(keys[3], cfg.n_heads * cfg.head_dim, cfg.dim,
+                              use_bias=False, param_dtype=param_dtype),
+        }
+
+    @staticmethod
+    def init_cache(cfg: AttnConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+        """Ring buffer of size ``window`` for windowed layers, else ``max_len``."""
+        slots = min(cfg.window, max_len) if cfg.window else max_len
+        shape = (batch, slots, cfg.n_kv_heads, cfg.head_dim)
+        return {
+            "k": jnp.zeros(shape, dtype),
+            "v": jnp.zeros(shape, dtype),
+            "pos": jnp.full((batch, slots), -1, jnp.int32),  # -1 = unwritten
+        }
+
+    @staticmethod
+    def apply(params, x, cfg: AttnConfig, *, positions, cache=None,
+              cache_index=None):
+        """x: (B, L, D). Returns (out, new_cache).
+
+        Full-sequence mode (cache None): causal/window mask over x itself.
+        Decode mode: L == 1; writes k/v at ``cache_index`` (scalar int32).
+        """
+        b, l, _ = x.shape
+        q = Linear.apply(params["wq"], x).reshape(b, l, cfg.n_heads, cfg.head_dim)
+        k = Linear.apply(params["wk"], x).reshape(b, l, cfg.n_kv_heads,
+                                                  cfg.head_dim)
+        v = Linear.apply(params["wv"], x).reshape(b, l, cfg.n_kv_heads,
+                                                  cfg.head_dim)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+        n_rep = cfg.n_heads // cfg.n_kv_heads
+
+        if cache is not None and l > 1:
+            # Prefill: compute full attention AND fill the cache.  Ring-buffer
+            # layout: position p lives at slot p % slots (must match decode).
+            slots = cache["k"].shape[1]
+            keep = min(l, slots)
+            if l <= slots:
+                new_cache = {
+                    "k": jax.lax.dynamic_update_slice(
+                        cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)),
+                    "v": jax.lax.dynamic_update_slice(
+                        cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)),
+                    "pos": jax.lax.dynamic_update_slice(
+                        cache["pos"],
+                        jnp.broadcast_to(positions, (b, l)).astype(jnp.int32),
+                        (0, 0)),
+                }
+            else:
+                slot_idx = (positions[0, l - keep:] % slots).astype(jnp.int32)
+                new_cache = {
+                    "k": cache["k"].at[:, slot_idx].set(
+                        k[:, l - keep:].astype(cache["k"].dtype)),
+                    "v": cache["v"].at[:, slot_idx].set(
+                        v[:, l - keep:].astype(cache["v"].dtype)),
+                    "pos": cache["pos"].at[:, slot_idx].set(
+                        jnp.broadcast_to(positions[:, l - keep:],
+                                         (b, keep)).astype(jnp.int32)),
+                }
+            if l >= CHUNKED_ATTN_THRESHOLD:
+                out = chunked_dot_product_attention(
+                    q, _repeat_kv(k, n_rep), _repeat_kv(v, n_rep),
+                    positions, positions, cfg.scale, causal=cfg.causal,
+                    window=cfg.window)
+            else:
+                mask = make_attention_mask(positions, positions,
+                                           causal=cfg.causal,
+                                           window=cfg.window)
+                out = dot_product_attention(q, _repeat_kv(k, n_rep),
+                                            _repeat_kv(v, n_rep), mask,
+                                            cfg.scale)
+            out = out.reshape(b, l, cfg.n_heads * cfg.head_dim)
+            return Linear.apply(params["wo"], out), new_cache
+
+        if cache is None:
+            if cfg.use_flash and cfg.causal and cfg.window is None:
+                from repro.kernels.attention import ops as flash_ops
+                out = flash_ops.flash_attention(
+                    q, _repeat_kv(k, n_rep), _repeat_kv(v, n_rep),
+                    causal=True, scale=cfg.scale)
+            elif l >= CHUNKED_ATTN_THRESHOLD:
+                out = chunked_dot_product_attention(
+                    q, _repeat_kv(k, n_rep), _repeat_kv(v, n_rep),
+                    positions, positions, cfg.scale, causal=cfg.causal,
+                    window=cfg.window)
+            else:
+                mask = make_attention_mask(positions, positions,
+                                           causal=cfg.causal,
+                                           window=cfg.window)
+                out = dot_product_attention(q, _repeat_kv(k, n_rep),
+                                            _repeat_kv(v, n_rep), mask,
+                                            cfg.scale)
+            new_cache = None
+        else:
+            slots = cache["k"].shape[1]
+            slot = (cache_index % slots).astype(jnp.int32)
+            k_cache = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+            v_cache = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+            pos = jax.lax.dynamic_update_slice(
+                cache["pos"], jnp.broadcast_to(positions, (b, 1)).astype(jnp.int32),
+                (0, slot))
+            new_cache = {"k": k_cache, "v": v_cache, "pos": pos}
+            mask = make_attention_mask(
+                jnp.broadcast_to(positions, (b, 1)), pos, causal=cfg.causal,
+                window=cfg.window, k_valid=pos >= 0)
+            out = dot_product_attention(
+                q, _repeat_kv(k_cache.astype(q.dtype), n_rep),
+                _repeat_kv(v_cache.astype(q.dtype), n_rep), mask, cfg.scale)
+
+        out = out.reshape(b, l, cfg.n_heads * cfg.head_dim)
+        return Linear.apply(params["wo"], out), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (VLM image layers / enc-dec decoder)
+# ---------------------------------------------------------------------------
+
+class CrossAttention:
+    @staticmethod
+    def init(key, cfg: AttnConfig, *, kv_dim: Optional[int] = None,
+             param_dtype=jnp.float32):
+        kv_dim = kv_dim or cfg.dim
+        keys = jax.random.split(key, 4)
+        return {
+            "wq": Linear.init(keys[0], cfg.dim, cfg.n_heads * cfg.head_dim,
+                              use_bias=cfg.qkv_bias, param_dtype=param_dtype),
+            "wk": Linear.init(keys[1], kv_dim, cfg.n_kv_heads * cfg.head_dim,
+                              use_bias=cfg.qkv_bias, param_dtype=param_dtype),
+            "wv": Linear.init(keys[2], kv_dim, cfg.n_kv_heads * cfg.head_dim,
+                              use_bias=cfg.qkv_bias, param_dtype=param_dtype),
+            "wo": Linear.init(keys[3], cfg.n_heads * cfg.head_dim, cfg.dim,
+                              use_bias=False, param_dtype=param_dtype),
+        }
+
+    @staticmethod
+    def precompute_kv(params, context, cfg: AttnConfig):
+        """Compute K/V once per request from context embeddings (B, Lc, kv_dim)."""
+        b, lc, _ = context.shape
+        k = Linear.apply(params["wk"], context).reshape(b, lc, cfg.n_kv_heads,
+                                                        cfg.head_dim)
+        v = Linear.apply(params["wv"], context).reshape(b, lc, cfg.n_kv_heads,
+                                                        cfg.head_dim)
+        return {"k": k, "v": v}
+
+    @staticmethod
+    def apply(params, x, kv, cfg: AttnConfig, *, context_mask=None):
+        b, l, _ = x.shape
+        lc = kv["k"].shape[1]
+        q = Linear.apply(params["wq"], x).reshape(b, l, cfg.n_heads, cfg.head_dim)
+        n_rep = cfg.n_heads // cfg.n_kv_heads
+        if context_mask is None:
+            mask = jnp.ones((b, 1, l, lc), dtype=bool)
+        else:
+            mask = context_mask[:, None, None, :]
+        out = dot_product_attention(q, _repeat_kv(kv["k"].astype(q.dtype), n_rep),
+                                    _repeat_kv(kv["v"].astype(q.dtype), n_rep),
+                                    mask, cfg.scale)
+        out = out.reshape(b, l, cfg.n_heads * cfg.head_dim)
+        return Linear.apply(params["wo"], out)
+
+
+# ---------------------------------------------------------------------------
+# Multi-head Latent Attention (DeepSeek-V3, arXiv:2412.19437)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    dim: int
+    n_heads: int
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+    rope_theta: float = 10000.0
+
+    @property
+    def qk_head_dim(self) -> int:
+        return self.qk_nope_head_dim + self.qk_rope_head_dim
+
+    @property
+    def scale(self) -> float:
+        return self.qk_head_dim ** -0.5
+
+    @property
+    def cache_width(self) -> int:
+        # Compressed cache per token: latent + shared rope key.
+        return self.kv_lora_rank + self.qk_rope_head_dim
+
+
+class MLA:
+    """DeepSeek MLA: low-rank compressed Q and KV; the decode cache stores the
+    (kv_lora_rank + rope) latent per token instead of per-head K/V."""
+
+    @staticmethod
+    def init(key, cfg: MLAConfig, *, param_dtype=jnp.float32):
+        keys = jax.random.split(key, 7)
+        h, r = cfg.n_heads, cfg.kv_lora_rank
+        return {
+            "wq_a": Linear.init(keys[0], cfg.dim, cfg.q_lora_rank,
+                                param_dtype=param_dtype),
+            "wq_b": Linear.init(keys[1], cfg.q_lora_rank,
+                                h * cfg.qk_head_dim, param_dtype=param_dtype),
+            "wkv_a": Linear.init(keys[2], cfg.dim,
+                                 r + cfg.qk_rope_head_dim,
+                                 param_dtype=param_dtype),
+            "wk_b": Linear.init(keys[3], r, h * cfg.qk_nope_head_dim,
+                                param_dtype=param_dtype),
+            "wv_b": Linear.init(keys[4], r, h * cfg.v_head_dim,
+                                param_dtype=param_dtype),
+            "wo": Linear.init(keys[5], h * cfg.v_head_dim, cfg.dim,
+                              param_dtype=param_dtype),
+        }
+
+    @staticmethod
+    def init_cache(cfg: MLAConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+        return {
+            "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+            "krope": jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dtype),
+            "pos": jnp.full((batch, max_len), -1, jnp.int32),
+        }
+
+    @staticmethod
+    def _queries(params, x, cfg: MLAConfig, positions):
+        b, l, _ = x.shape
+        q = Linear.apply(params["wq_b"], Linear.apply(params["wq_a"], x))
+        q = q.reshape(b, l, cfg.n_heads, cfg.qk_head_dim)
+        q_nope = q[..., : cfg.qk_nope_head_dim]
+        q_rope = apply_rope(q[..., cfg.qk_nope_head_dim:], positions,
+                            cfg.rope_theta)
+        return jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    @staticmethod
+    def _expand_kv(params, ckv, krope, cfg: MLAConfig):
+        """latent (B, S, r) + shared rope key (B, S, rope) -> per-head K/V."""
+        b, s, _ = ckv.shape
+        k_nope = Linear.apply(params["wk_b"], ckv).reshape(
+            b, s, cfg.n_heads, cfg.qk_nope_head_dim)
+        v = Linear.apply(params["wv_b"], ckv).reshape(
+            b, s, cfg.n_heads, cfg.v_head_dim)
+        k_rope = jnp.broadcast_to(krope[:, :, None, :],
+                                  (b, s, cfg.n_heads, cfg.qk_rope_head_dim))
+        k = jnp.concatenate([k_nope, k_rope], axis=-1)
+        return k, v
+
+    @staticmethod
+    def apply(params, x, cfg: MLAConfig, *, positions, cache=None,
+              cache_index=None):
+        b, l, _ = x.shape
+        q = MLA._queries(params, x, cfg, positions)
+        kv_a = Linear.apply(params["wkv_a"], x)
+        ckv, krope_raw = jnp.split(kv_a, [cfg.kv_lora_rank], axis=-1)
+        krope = apply_rope(krope_raw[:, :, None, :], positions,
+                           cfg.rope_theta)[:, :, 0, :]
+
+        if cache is None or l > 1:
+            k, v = MLA._expand_kv(params, ckv, krope, cfg)
+            if l >= CHUNKED_ATTN_THRESHOLD:
+                out = chunked_dot_product_attention(
+                    q, k, v, positions, positions, cfg.scale, causal=True,
+                    window=None)
+            else:
+                mask = make_attention_mask(positions, positions, causal=True,
+                                           window=None)
+                out = dot_product_attention(q, k, v, mask, cfg.scale)
+            new_cache = None
+            if cache is not None:  # prefill: fill the compressed cache
+                new_cache = {
+                    "ckv": jax.lax.dynamic_update_slice(
+                        cache["ckv"], ckv.astype(cache["ckv"].dtype),
+                        (0, 0, 0)),
+                    "krope": jax.lax.dynamic_update_slice(
+                        cache["krope"], krope.astype(cache["krope"].dtype),
+                        (0, 0, 0)),
+                    "pos": jax.lax.dynamic_update_slice(
+                        cache["pos"],
+                        jnp.broadcast_to(positions, (b, l)).astype(jnp.int32),
+                        (0, 0)),
+                }
+        else:
+            # Absorbed-matrix decode (DeepSeek-V3 serving form): attention is
+            # computed entirely in the compressed latent space, so the cache is
+            # never expanded to per-head K/V (that would be O(S*H*d) bytes).
+            ckv_c = jax.lax.dynamic_update_slice(
+                cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, cache_index, 0))
+            krope_c = jax.lax.dynamic_update_slice(
+                cache["krope"], krope.astype(cache["krope"].dtype),
+                (0, cache_index, 0))
+            pos = jax.lax.dynamic_update_slice(
+                cache["pos"], jnp.broadcast_to(positions, (b, 1)).astype(jnp.int32),
+                (0, cache_index))
+            new_cache = {"ckv": ckv_c, "krope": krope_c, "pos": pos}
+            q_nope = q[..., : cfg.qk_nope_head_dim]
+            q_rope = q[..., cfg.qk_nope_head_dim:]
+            # Absorb W_uk into the query:  q_lat[h] = W_uk[h]^T q_nope[h]
+            w_uk = params["wk_b"]["w"].astype(q.dtype).reshape(
+                cfg.kv_lora_rank, cfg.n_heads, cfg.qk_nope_head_dim)
+            q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope, w_uk)
+            ckv_f = ckv_c.astype(q.dtype)
+            logits = (jnp.einsum("bqhr,bsr->bhqs", q_lat, ckv_f) +
+                      jnp.einsum("bqhd,bsd->bhqs", q_rope,
+                                 krope_c.astype(q.dtype)))
+            logits = logits.astype(jnp.float32) * cfg.scale
+            mask = make_attention_mask(jnp.broadcast_to(positions, (b, 1)), pos,
+                                       causal=True, window=None,
+                                       k_valid=pos >= 0)
+            logits = jnp.where(mask, logits, NEG_INF)
+            probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+            o_lat = jnp.einsum("bhqs,bsr->bqhr", probs, ckv_f)
+            # Absorb W_uv on the way out:  out[h] = W_uv[h] o_lat[h]
+            w_uv = params["wv_b"]["w"].astype(q.dtype).reshape(
+                cfg.kv_lora_rank, cfg.n_heads, cfg.v_head_dim)
+            out = jnp.einsum("bqhr,rhv->bqhv", o_lat, w_uv)
+
+        out = out.reshape(b, l, cfg.n_heads * cfg.v_head_dim)
+        return Linear.apply(params["wo"], out), new_cache

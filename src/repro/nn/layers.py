@@ -1,0 +1,158 @@
+"""Core layers: Linear, Embedding, norms, gated/ungated MLP blocks.
+
+Convention: ``X.init(key, ...) -> params`` (nested dict pytree) and
+``X.apply(params, x, ...) -> y``.  Compute dtype follows the input; params are
+kept in ``param_dtype`` and cast at use (mixed-precision friendly).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import activations, initializers
+
+
+def _cast(p, dtype):
+    return p.astype(dtype) if p.dtype != dtype else p
+
+
+class Linear:
+    @staticmethod
+    def init(key, in_dim: int, out_dim: int, *, use_bias: bool = False,
+             param_dtype=jnp.float32, stddev: float | None = None):
+        wkey, _ = jax.random.split(key)
+        if stddev is None:
+            w = initializers.scaled_normal(in_dim)(wkey, (in_dim, out_dim),
+                                                   param_dtype)
+        else:
+            w = initializers.normal(stddev)(wkey, (in_dim, out_dim), param_dtype)
+        params = {"w": w}
+        if use_bias:
+            params["b"] = jnp.zeros((out_dim,), param_dtype)
+        return params
+
+    @staticmethod
+    def apply(params, x):
+        w = _cast(params["w"], x.dtype)
+        y = x @ w
+        if "b" in params:
+            y = y + _cast(params["b"], x.dtype)
+        return y
+
+
+class Embedding:
+    @staticmethod
+    def init(key, vocab: int, dim: int, *, param_dtype=jnp.float32,
+             stddev: float = 0.02):
+        return {"table": initializers.normal(stddev)(key, (vocab, dim),
+                                                     param_dtype)}
+
+    @staticmethod
+    def apply(params, ids, *, dtype=None):
+        table = params["table"]
+        if dtype is not None:
+            table = _cast(table, dtype)
+        return jnp.take(table, ids, axis=0)
+
+    @staticmethod
+    def attend(params, x):
+        """Tied-embedding logits: x @ table.T."""
+        table = _cast(params["table"], x.dtype)
+        return x @ table.T
+
+
+class RMSNorm:
+    @staticmethod
+    def init(key, dim: int, *, param_dtype=jnp.float32):
+        del key
+        return {"scale": jnp.ones((dim,), param_dtype)}
+
+    @staticmethod
+    def apply(params, x, *, eps: float = 1e-6):
+        orig_dtype = x.dtype
+        x = x.astype(jnp.float32)
+        var = jnp.mean(x * x, axis=-1, keepdims=True)
+        x = x * jax.lax.rsqrt(var + eps)
+        return (x * _cast(params["scale"], jnp.float32)).astype(orig_dtype)
+
+
+class LayerNorm:
+    @staticmethod
+    def init(key, dim: int, *, param_dtype=jnp.float32):
+        del key
+        return {"scale": jnp.ones((dim,), param_dtype),
+                "bias": jnp.zeros((dim,), param_dtype)}
+
+    @staticmethod
+    def apply(params, x, *, eps: float = 1e-5):
+        orig_dtype = x.dtype
+        x = x.astype(jnp.float32)
+        mean = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.var(x, axis=-1, keepdims=True)
+        x = (x - mean) * jax.lax.rsqrt(var + eps)
+        out = x * _cast(params["scale"], jnp.float32) + _cast(params["bias"],
+                                                              jnp.float32)
+        return out.astype(orig_dtype)
+
+
+def make_norm(kind: str):
+    if kind == "rmsnorm":
+        return RMSNorm
+    if kind == "layernorm":
+        return LayerNorm
+    raise ValueError(f"unknown norm {kind!r}")
+
+
+class MLP:
+    """Transformer FFN.  ``gated=True`` gives the GLU family (GeGLU/SwiGLU);
+    otherwise the classic up->act->down block (incl. squared-ReLU Nemotron)."""
+
+    @staticmethod
+    def init(key, dim: int, hidden: int, *, gated: bool, use_bias: bool = False,
+             param_dtype=jnp.float32):
+        keys = jax.random.split(key, 3)
+        params = {
+            "up": Linear.init(keys[0], dim, hidden, use_bias=use_bias,
+                              param_dtype=param_dtype),
+            "down": Linear.init(keys[1], hidden, dim, use_bias=use_bias,
+                                param_dtype=param_dtype),
+        }
+        if gated:
+            params["gate"] = Linear.init(keys[2], dim, hidden, use_bias=use_bias,
+                                         param_dtype=param_dtype)
+        return params
+
+    @staticmethod
+    def apply(params, x, *, activation: str):
+        act = activations.get(activation)
+        up = Linear.apply(params["up"], x)
+        if "gate" in params:
+            h = act(Linear.apply(params["gate"], x)) * up
+        else:
+            h = act(up)
+        return Linear.apply(params["down"], h)
+
+
+class SharedMLPStack:
+    """Simple n-layer MLP with an activation between layers (used by the DataMUX
+    demultiplexer head and task heads)."""
+
+    @staticmethod
+    def init(key, dims: list[int], *, use_bias: bool = True,
+             param_dtype=jnp.float32):
+        keys = jax.random.split(key, len(dims) - 1)
+        return {
+            f"l{i}": Linear.init(keys[i], dims[i], dims[i + 1],
+                                 use_bias=use_bias, param_dtype=param_dtype)
+            for i in range(len(dims) - 1)
+        }
+
+    @staticmethod
+    def apply(params, x, *, activation: str = "gelu"):
+        act = activations.get(activation)
+        n = len(params)
+        for i in range(n):
+            x = Linear.apply(params[f"l{i}"], x)
+            if i < n - 1:
+                x = act(x)
+        return x

@@ -1,0 +1,413 @@
+"""State-space / recurrent sequence layers: Mamba (S6) and xLSTM (mLSTM+sLSTM).
+
+TPU adaptation notes (see DESIGN.md):
+  * Mamba's selective scan is implemented as a chunked associative scan —
+    ``lax.scan`` over sequence chunks with ``lax.associative_scan`` inside —
+    so the (B, L, d_inner, d_state) decay tensor is only materialised one
+    chunk at a time (the VMEM-friendly equivalent of the CUDA fused scan).
+  * The inner dimension is sharded over the ``model`` mesh axis; the scan
+    carry (B, d_inner, d_state) shards the same way, so the recurrence needs
+    no collectives.
+  * Decode is a single recurrence step against an O(1) state cache — this is
+    what makes the SSM/hybrid architectures eligible for ``long_500k``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import Linear, RMSNorm
+
+# ---------------------------------------------------------------------------
+# Mamba (S6) — arXiv:2312.00752, as used in Jamba (arXiv:2403.19887)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    dim: int
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0  # 0 -> ceil(dim / 16)
+    chunk: int = 128  # selective-scan chunk length
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.dim
+
+    @property
+    def dt_rank_(self) -> int:
+        return self.dt_rank or max(1, (self.dim + 15) // 16)
+
+
+class Mamba:
+    @staticmethod
+    def init(key, cfg: MambaConfig, *, param_dtype=jnp.float32):
+        keys = jax.random.split(key, 6)
+        di, ds, dr = cfg.d_inner, cfg.d_state, cfg.dt_rank_
+        return {
+            "in_proj": Linear.init(keys[0], cfg.dim, 2 * di,
+                                   param_dtype=param_dtype),
+            "conv_w": 0.1 * jax.random.normal(keys[1], (cfg.d_conv, di),
+                                              param_dtype),
+            "conv_b": jnp.zeros((di,), param_dtype),
+            "x_proj": Linear.init(keys[2], di, dr + 2 * ds,
+                                  param_dtype=param_dtype),
+            "dt_proj": Linear.init(keys[3], dr, di, use_bias=True,
+                                   param_dtype=param_dtype),
+            # A initialised to -[1..d_state] per channel (S4D-real init).
+            "A_log": jnp.log(jnp.broadcast_to(
+                jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))
+            ).astype(param_dtype),
+            "D": jnp.ones((di,), param_dtype),
+            "out_proj": Linear.init(keys[4], di, cfg.dim,
+                                    param_dtype=param_dtype),
+        }
+
+    @staticmethod
+    def init_cache(cfg: MambaConfig, batch: int, dtype=jnp.float32):
+        return {
+            "ssm": jnp.zeros((batch, cfg.d_inner, cfg.d_state), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), dtype),
+        }
+
+    # -- shared pieces --------------------------------------------------------
+
+    @staticmethod
+    def _ssm_params(params, u, cfg: MambaConfig):
+        """u: (..., d_inner) -> (delta, B, C) with delta (..., d_inner)."""
+        dr, ds = cfg.dt_rank_, cfg.d_state
+        proj = Linear.apply(params["x_proj"], u)
+        dt, b, c = jnp.split(proj, [dr, dr + ds], axis=-1)
+        delta = jax.nn.softplus(Linear.apply(params["dt_proj"], dt)
+                                .astype(jnp.float32))
+        return delta, b.astype(jnp.float32), c.astype(jnp.float32)
+
+    # -- full-sequence (train / prefill) --------------------------------------
+
+    @staticmethod
+    def apply(params, x, cfg: MambaConfig, *, cache=None):
+        """x: (B, L, D) -> (y, new_cache).
+
+        cache given + L == 1: decode step.  cache given + L > 1: prefill —
+        full scan whose final state fills the cache."""
+        if cache is not None and x.shape[1] == 1:
+            return Mamba._decode_step(params, x, cfg, cache)
+
+        b, l, _ = x.shape
+        di = cfg.d_inner
+        xz = Linear.apply(params["in_proj"], x)
+        u, z = jnp.split(xz, 2, axis=-1)  # (B, L, di) each
+        u_raw = u
+
+        # causal depthwise conv1d
+        u = Mamba._causal_conv(params, u, cfg)
+        u = jax.nn.silu(u)
+
+        delta, bmat, cmat = Mamba._ssm_params(params, u, cfg)
+        a = -jnp.exp(params["A_log"].astype(jnp.float32))  # (di, ds)
+
+        # chunked associative scan
+        ck = min(cfg.chunk, l)
+        pad = (-l) % ck
+        if pad:
+            u_p = jnp.pad(u, ((0, 0), (0, pad), (0, 0)))
+            delta = jnp.pad(delta, ((0, 0), (0, pad), (0, 0)))
+            bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+            cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        else:
+            u_p = u
+        nc = (l + pad) // ck
+        uf = u_p.astype(jnp.float32).reshape(b, nc, ck, di)
+        delta = delta.reshape(b, nc, ck, di)
+        bmat = bmat.reshape(b, nc, ck, cfg.d_state)
+        cmat = cmat.reshape(b, nc, ck, cfg.d_state)
+
+        def chunk_step(h_prev, inp):
+            uc, dc, bc, cc = inp  # (B, ck, di), ..., (B, ck, ds)
+            decay = jnp.exp(dc[..., None] * a)            # (B, ck, di, ds)
+            drive = (dc * uc)[..., None] * bc[:, :, None, :]
+            def combine(p, q):
+                return (q[0] * p[0], q[0] * p[1] + q[1])
+            pa, pb = jax.lax.associative_scan(combine, (decay, drive), axis=1)
+            h = pa * h_prev[:, None] + pb                 # (B, ck, di, ds)
+            y = jnp.einsum("blds,bls->bld", h, cc)
+            return h[:, -1], y
+
+        h0 = jnp.zeros((b, di, cfg.d_state), jnp.float32)
+        h_last, ys = jax.lax.scan(
+            chunk_step, h0,
+            (uf.transpose(1, 0, 2, 3), delta.transpose(1, 0, 2, 3),
+             bmat.transpose(1, 0, 2, 3), cmat.transpose(1, 0, 2, 3)))
+        y = ys.transpose(1, 0, 2, 3).reshape(b, nc * ck, di)[:, :l]
+        y = y + params["D"].astype(jnp.float32) * u.astype(jnp.float32)
+        y = y.astype(x.dtype) * jax.nn.silu(z)
+        new_cache = None
+        if cache is not None:  # prefill: final state + conv history
+            kkeep = cfg.d_conv - 1
+            conv_hist = jnp.pad(u_raw, ((0, 0), (max(0, kkeep - l), 0),
+                                        (0, 0)))[:, -kkeep:] if kkeep else \
+                jnp.zeros((b, 0, di), u_raw.dtype)
+            # NOTE: h_last is exact only when l % ck == 0 (padding appends
+            # zero-drive steps whose decay still shrinks the state).  The
+            # padded tail has delta=0 => decay=exp(0)=1, drive=0, so the
+            # state is in fact preserved exactly.
+            new_cache = {"ssm": h_last,
+                         "conv": conv_hist.astype(cache["conv"].dtype)}
+        return Linear.apply(params["out_proj"], y), new_cache
+
+    @staticmethod
+    def _causal_conv(params, u, cfg: MambaConfig):
+        w = params["conv_w"].astype(u.dtype)  # (k, di)
+        k = cfg.d_conv
+        u_pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+        out = sum(u_pad[:, i: i + u.shape[1]] * w[i] for i in range(k))
+        return out + params["conv_b"].astype(u.dtype)
+
+    # -- single-token decode ----------------------------------------------------
+
+    @staticmethod
+    def _decode_step(params, x, cfg: MambaConfig, cache):
+        b, l, _ = x.shape
+        assert l == 1
+        xz = Linear.apply(params["in_proj"], x[:, 0])      # (B, 2di)
+        u, z = jnp.split(xz, 2, axis=-1)
+        conv_hist = jnp.concatenate([cache["conv"], u[:, None]], axis=1)
+        w = params["conv_w"].astype(u.dtype)
+        u = jnp.einsum("bkd,kd->bd", conv_hist, w) + \
+            params["conv_b"].astype(u.dtype)
+        u = jax.nn.silu(u)
+        delta, bmat, cmat = Mamba._ssm_params(params, u, cfg)
+        a = -jnp.exp(params["A_log"].astype(jnp.float32))
+        decay = jnp.exp(delta[..., None] * a)              # (B, di, ds)
+        drive = (delta * u.astype(jnp.float32))[..., None] * bmat[:, None, :]
+        h = decay * cache["ssm"] + drive
+        y = jnp.einsum("bds,bs->bd", h, cmat)
+        y = y + params["D"].astype(jnp.float32) * u.astype(jnp.float32)
+        y = y.astype(x.dtype) * jax.nn.silu(z)
+        y = Linear.apply(params["out_proj"], y)[:, None]
+        return y, {"ssm": h, "conv": conv_hist[:, 1:]}
+
+
+# ---------------------------------------------------------------------------
+# xLSTM — arXiv:2405.04517 (mLSTM: matrix memory; sLSTM: scalar memory)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    dim: int
+    n_heads: int = 4
+    proj_factor: float = 2.0  # mLSTM block up-projection
+    chunk: int = 64           # mLSTM scan chunk
+
+    @property
+    def d_inner(self) -> int:
+        return int(self.proj_factor * self.dim)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_inner // self.n_heads
+
+
+class MLSTM:
+    """mLSTM block: up-proj -> matrix-memory recurrence -> down-proj.
+
+    The recurrence has no hidden-to-hidden weights, so it is chunk-scannable
+    like a gated linear attention.  State per head: C (hd, hd), n (hd), m ()."""
+
+    @staticmethod
+    def init(key, cfg: XLSTMConfig, *, param_dtype=jnp.float32):
+        keys = jax.random.split(key, 8)
+        d, di, h, hd = cfg.dim, cfg.d_inner, cfg.n_heads, cfg.head_dim
+        return {
+            "up": Linear.init(keys[0], d, 2 * di, param_dtype=param_dtype),
+            "wq": Linear.init(keys[1], di, di, param_dtype=param_dtype),
+            "wk": Linear.init(keys[2], di, di, param_dtype=param_dtype),
+            "wv": Linear.init(keys[3], di, di, param_dtype=param_dtype),
+            "wi": Linear.init(keys[4], di, h, use_bias=True,
+                              param_dtype=param_dtype),
+            "wf": Linear.init(keys[5], di, h, use_bias=True,
+                              param_dtype=param_dtype),
+            "wo": Linear.init(keys[6], di, di, use_bias=True,
+                              param_dtype=param_dtype),
+            "down": Linear.init(keys[7], di, d, param_dtype=param_dtype),
+        }
+
+    @staticmethod
+    def init_cache(cfg: XLSTMConfig, batch: int):
+        h, hd = cfg.n_heads, cfg.head_dim
+        return {
+            "C": jnp.zeros((batch, h, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, h, hd), jnp.float32),
+            "m": jnp.full((batch, h), -1e30, jnp.float32),
+        }
+
+    @staticmethod
+    def _qkvgates(params, u, cfg: XLSTMConfig):
+        b = u.shape[0]
+        lead = u.shape[:-1]
+        h, hd = cfg.n_heads, cfg.head_dim
+        q = Linear.apply(params["wq"], u).reshape(*lead, h, hd)
+        k = Linear.apply(params["wk"], u).reshape(*lead, h, hd) / (hd ** 0.5)
+        v = Linear.apply(params["wv"], u).reshape(*lead, h, hd)
+        it = Linear.apply(params["wi"], u).astype(jnp.float32)
+        ft = Linear.apply(params["wf"], u).astype(jnp.float32)
+        o = jax.nn.sigmoid(Linear.apply(params["wo"], u))
+        return q, k, v, it, ft, o
+
+    @staticmethod
+    def apply(params, x, cfg: XLSTMConfig, *, cache=None):
+        if cache is not None and x.shape[1] == 1:
+            return MLSTM._decode_step(params, x, cfg, cache)
+        b, l, _ = x.shape
+        h, hd = cfg.n_heads, cfg.head_dim
+        uz = Linear.apply(params["up"], x)
+        u, z = jnp.split(uz, 2, axis=-1)
+        q, k, v, it, ft, o = MLSTM._qkvgates(params, u, cfg)
+
+        # stepwise stabilised recurrence, scanned over time (exponential
+        # gating needs the running max m, which breaks pure associativity).
+        def step(carry, inp):
+            C, n, m = carry
+            qt, kt, vt, i_t, f_t = inp  # (B,h,hd) x3, (B,h) x2
+            logf = jax.nn.log_sigmoid(f_t)
+            m_new = jnp.maximum(logf + m, i_t)
+            i_g = jnp.exp(i_t - m_new)
+            f_g = jnp.exp(logf + m - m_new)
+            C = f_g[..., None, None] * C + \
+                i_g[..., None, None] * (vt[..., :, None] *
+                                        kt[..., None, :]).astype(jnp.float32)
+            n = f_g[..., None] * n + i_g[..., None] * kt.astype(jnp.float32)
+            num = jnp.einsum("bhvk,bhk->bhv", C, qt.astype(jnp.float32))
+            den = jnp.maximum(
+                jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt.astype(jnp.float32))),
+                1.0)
+            return (C, n, m_new), (num / den[..., None])
+
+        carry0 = (jnp.zeros((b, h, hd, hd), jnp.float32),
+                  jnp.zeros((b, h, hd), jnp.float32),
+                  jnp.full((b, h), -1e30, jnp.float32))
+        carry, hs = jax.lax.scan(
+            step, carry0,
+            (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+             v.transpose(1, 0, 2, 3), it.transpose(1, 0, 2),
+             ft.transpose(1, 0, 2)))
+        hseq = hs.transpose(1, 0, 2, 3).reshape(b, l, cfg.d_inner)
+        out = o * hseq.astype(x.dtype) * jax.nn.silu(z)
+        new_cache = None
+        if cache is not None:  # prefill
+            new_cache = {"C": carry[0], "n": carry[1], "m": carry[2]}
+        return Linear.apply(params["down"], out), new_cache
+
+    @staticmethod
+    def _decode_step(params, x, cfg: XLSTMConfig, cache):
+        b, l, _ = x.shape
+        assert l == 1
+        uz = Linear.apply(params["up"], x[:, 0])
+        u, z = jnp.split(uz, 2, axis=-1)
+        q, k, v, it, ft, o = MLSTM._qkvgates(params, u, cfg)
+        it, ft = it, ft  # (B, h)
+        logf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(logf + cache["m"], it)
+        i_g = jnp.exp(it - m_new)
+        f_g = jnp.exp(logf + cache["m"] - m_new)
+        C = f_g[..., None, None] * cache["C"] + \
+            i_g[..., None, None] * (v[..., :, None] *
+                                    k[..., None, :]).astype(jnp.float32)
+        n = f_g[..., None] * cache["n"] + i_g[..., None] * k.astype(jnp.float32)
+        num = jnp.einsum("bhvk,bhk->bhv", C, q.astype(jnp.float32))
+        den = jnp.maximum(
+            jnp.abs(jnp.einsum("bhk,bhk->bh", n, q.astype(jnp.float32))), 1.0)
+        hseq = (num / den[..., None]).reshape(b, cfg.d_inner)
+        out = o * hseq.astype(x.dtype) * jax.nn.silu(z)
+        y = Linear.apply(params["down"], out)[:, None]
+        return y, {"C": C, "n": n, "m": m_new}
+
+
+class SLSTM:
+    """sLSTM block: scalar-memory LSTM with exponential gating and
+    block-diagonal (per-head) recurrent weights.  Inherently sequential —
+    scanned stepwise; heads shard over the model axis."""
+
+    @staticmethod
+    def init(key, cfg: XLSTMConfig, *, param_dtype=jnp.float32):
+        keys = jax.random.split(key, 3)
+        d = cfg.dim
+        h = cfg.n_heads
+        hd = d // h
+        # input weights for gates i, f, z, o
+        wx = (d ** -0.5) * jax.random.normal(keys[0], (d, 4 * d), param_dtype)
+        # per-head recurrent weights (h, hd, 4*hd)
+        wr = (hd ** -0.5) * jax.random.normal(keys[1], (h, hd, 4 * hd),
+                                              param_dtype)
+        b = jnp.zeros((4 * d,), param_dtype)
+        # gated output FFN (proj factor 4/3, GeGLU per xLSTM paper)
+        ff = int(4 * d / 3)
+        from repro.nn.layers import MLP  # local import to avoid cycle
+        return {
+            "wx": wx, "wr": wr, "b": b,
+            "ffn": MLP.init(keys[2], d, ff, gated=True,
+                            param_dtype=param_dtype),
+        }
+
+    @staticmethod
+    def init_cache(cfg: XLSTMConfig, batch: int):
+        d = cfg.dim
+        return {
+            "c": jnp.zeros((batch, d), jnp.float32),
+            "n": jnp.zeros((batch, d), jnp.float32),
+            "m": jnp.full((batch, d), -1e30, jnp.float32),
+            "h": jnp.zeros((batch, d), jnp.float32),
+        }
+
+    @staticmethod
+    def _step(params, cfg: XLSTMConfig, xt, state):
+        """xt: (B, d) one timestep."""
+        b = xt.shape[0]
+        d = cfg.dim
+        h = cfg.n_heads
+        hd = d // h
+        c, n, m, hprev = state
+        gx = xt @ params["wx"].astype(xt.dtype) + params["b"].astype(xt.dtype)
+        hp = hprev.astype(xt.dtype).reshape(b, h, hd)
+        gr = jnp.einsum("bhd,hdk->bhk", hp,
+                        params["wr"].astype(xt.dtype)).reshape(b, 4 * d)
+        g = (gx + gr).astype(jnp.float32)
+        gi, gf, gz, go = jnp.split(g, 4, axis=-1)
+        m_new = jnp.maximum(jax.nn.log_sigmoid(gf) + m, gi)
+        i_g = jnp.exp(gi - m_new)
+        f_g = jnp.exp(jax.nn.log_sigmoid(gf) + m - m_new)
+        c_new = f_g * c + i_g * jnp.tanh(gz)
+        n_new = f_g * n + i_g
+        h_new = jax.nn.sigmoid(go) * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, m_new, h_new), h_new
+
+    @staticmethod
+    def apply(params, x, cfg: XLSTMConfig, *, cache=None):
+        if cache is not None and x.shape[1] == 1:
+            state = (cache["c"], cache["n"], cache["m"], cache["h"])
+            state, hy = SLSTM._step(params, cfg, x[:, 0], state)
+            y = hy.astype(x.dtype)[:, None]
+            new_cache = {"c": state[0], "n": state[1], "m": state[2],
+                         "h": state[3]}
+        else:
+            b, l, d = x.shape
+            state = (jnp.zeros((b, d), jnp.float32),
+                     jnp.zeros((b, d), jnp.float32),
+                     jnp.full((b, d), -1e30, jnp.float32),
+                     jnp.zeros((b, d), jnp.float32))
+            state, hs = jax.lax.scan(
+                lambda s, xt: SLSTM._step(params, cfg, xt, s), state,
+                x.transpose(1, 0, 2))
+            y = hs.transpose(1, 0, 2).astype(x.dtype)
+            new_cache = None
+            if cache is not None:  # prefill
+                new_cache = {"c": state[0], "n": state[1], "m": state[2],
+                             "h": state[3]}
+        from repro.nn.layers import MLP
+        y = y + MLP.apply(params["ffn"], y, activation="gelu")
+        return y, new_cache

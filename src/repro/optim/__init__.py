@@ -1,0 +1,6 @@
+from repro.optim.adamw import AdamW, apply_updates
+from repro.optim.schedule import constant, linear_warmup_cosine
+from repro.optim.clip import clip_by_global_norm, global_norm
+
+__all__ = ["AdamW", "apply_updates", "constant", "linear_warmup_cosine",
+           "clip_by_global_norm", "global_norm"]

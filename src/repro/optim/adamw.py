@@ -1,0 +1,66 @@
+"""AdamW in pure JAX (no optax in this container).
+
+States are plain pytrees mirroring the params, so they shard with the same
+PartitionSpecs (plus the ZeRO-1 data-axis extension in repro/sharding).
+``state_dtype`` lets 100B+ configs keep moments in bf16 (memory-roofline
+lever; noted in EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float | Callable[[jnp.ndarray], jnp.ndarray] = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    state_dtype: str | None = None  # None -> follow param dtype
+
+    def init(self, params):
+        def zeros_like(p):
+            dt = jnp.dtype(self.state_dtype) if self.state_dtype else p.dtype
+            return jnp.zeros(p.shape, dt)
+
+        return {
+            "mu": jax.tree.map(zeros_like, params),
+            "nu": jax.tree.map(zeros_like, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        lr = self.lr(step) if callable(self.lr) else self.lr
+        b1, b2 = self.b1, self.b2
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, mu, nu, p):
+            g32 = g.astype(jnp.float32)
+            mu32 = mu.astype(jnp.float32) * b1 + (1 - b1) * g32
+            nu32 = nu.astype(jnp.float32) * b2 + (1 - b2) * g32 * g32
+            mhat = mu32 / c1
+            nhat = nu32 / c2
+            delta = mhat / (jnp.sqrt(nhat) + self.eps)
+            if self.weight_decay and p.ndim >= 2:  # decay matrices only
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return ((-lr * delta).astype(p.dtype), mu32.astype(mu.dtype),
+                    nu32.astype(nu.dtype))
+
+        out = jax.tree.map(upd, grads, state["mu"], state["nu"], params)
+        updates = jax.tree.map(lambda t: t[0], out,
+                               is_leaf=lambda t: isinstance(t, tuple))
+        mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+        nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+        return updates, {"mu": mu, "nu": nu, "step": step}
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)

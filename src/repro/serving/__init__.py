@@ -1,0 +1,4 @@
+from repro.serving.engine import Engine, ServeState
+from repro.serving.kvcache import cache_bytes
+
+__all__ = ["Engine", "ServeState", "cache_bytes"]

@@ -1,0 +1,104 @@
+"""Batched serving engine with first-class data multiplexing.
+
+Beyond-paper extension (DESIGN.md §3): the paper evaluates DataMUX on
+encoder classification only; here N user streams share one backbone stream
+end-to-end through autoregressive decoding — one KV-cache slot, one decode
+matmul, demux applied per step to the final hidden state.
+
+Flow:  prefill(prompts (B, N, Lp)) -> ServeState{cache, index_embeds, pos}
+       step(state, last_tokens (B, N)) -> (logits (B, N, V), state)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import Backbone
+from repro.nn.moe import SINGLE, MeshInfo
+
+
+@dataclasses.dataclass
+class ServeState:
+    cache: Any
+    pos: jnp.ndarray                     # scalar int32: next absolute position
+    index_embeds: Optional[jnp.ndarray]  # (B, N, d) for index-embed demux
+    cross_kv: Any = None
+
+
+class Engine:
+    def __init__(self, params, cfg: ModelConfig, *, batch: int, max_len: int,
+                 mesh=None, mesh_info: MeshInfo = SINGLE, jit: bool = True):
+        self.params = params
+        self.cfg = cfg
+        self.batch = batch
+        self.max_len = max_len + cfg.mux.prefix_len
+        self.mesh = mesh
+        self.mesh_info = mesh_info
+        self._prefill = jax.jit(self._prefill_impl) if jit \
+            else self._prefill_impl
+        self._step = jax.jit(self._step_impl) if jit else self._step_impl
+
+    # -- impl -------------------------------------------------------------------
+
+    def _prefill_impl(self, params, tokens, context):
+        cfg = self.cfg
+        cache = Backbone.init_cache(cfg, self.batch, self.max_len)
+        # last_only: never materialise the (B, N, L, d) demux tensor —
+        # serving prefill needs next-token logits only (§Perf A5)
+        out = Backbone.apply(params, tokens, cfg, context=context,
+                             cache=cache, mesh=self.mesh,
+                             mesh_info=self.mesh_info, last_only=True)
+        lp = tokens.shape[-1] + cfg.mux.prefix_len
+        last_logits = out["logits"][..., -1, :]
+        return (out["cache"], out["index_embeds"], last_logits,
+                jnp.asarray(lp, jnp.int32))
+
+    def _step_impl(self, params, tokens, cache, pos, index_embeds, cross_kv):
+        return Backbone.decode_step(
+            params, tokens, cache, pos, self.cfg,
+            index_embeds=index_embeds, cross_kv=cross_kv,
+            mesh=self.mesh, mesh_info=self.mesh_info)
+
+    # -- public API -----------------------------------------------------------------
+
+    def prefill(self, prompts, context=None) -> tuple[jnp.ndarray, ServeState]:
+        """prompts: (B, N, Lp) muxed or (B, Lp).  Returns (last-token logits,
+        state)."""
+        cross_kv = None
+        if context is not None:
+            cross_kv = Backbone.encode_context(
+                self.params, jnp.asarray(context), self.cfg,
+                mesh=self.mesh, mesh_info=self.mesh_info)
+        cache, index_embeds, last_logits, pos = self._prefill(
+            self.params, jnp.asarray(prompts), context)
+        return last_logits, ServeState(cache=cache, pos=pos,
+                                       index_embeds=index_embeds,
+                                       cross_kv=cross_kv)
+
+    def step(self, state: ServeState, tokens) -> tuple[jnp.ndarray, ServeState]:
+        logits, cache = self._step(self.params, jnp.asarray(tokens),
+                                   state.cache, state.pos,
+                                   state.index_embeds, state.cross_kv)
+        return logits, dataclasses.replace(state, cache=cache,
+                                           pos=state.pos + 1)
+
+    def generate(self, prompts, steps: int, *, context=None,
+                 greedy: bool = True, rng=None):
+        """Greedy/sampled generation for all (B, N) streams simultaneously."""
+        logits, state = self.prefill(prompts, context=context)
+        toks = []
+        last = jnp.argmax(logits, axis=-1)
+        for t in range(steps):
+            toks.append(last)
+            logits, state = self.step(state, last)
+            if greedy:
+                last = jnp.argmax(logits, axis=-1)
+            else:
+                rng, k = jax.random.split(rng)
+                last = jax.random.categorical(k, logits)
+        toks.append(last)
+        return jnp.stack(toks, axis=-1)  # (B, N, steps+1) or (B, steps+1)

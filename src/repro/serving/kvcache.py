@@ -1,0 +1,52 @@
+"""KV/state cache accounting — bytes per request at a given context length.
+
+Used by the memory benchmark (paper Fig 12 analogue) and the roofline report.
+The headline DataMUX serving win: N streams share ONE cache slot, so cache
+bytes per *stream* divide by N."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def _dtype_bytes(dtype_str: str) -> int:
+    return jnp.dtype(dtype_str).itemsize
+
+
+def cache_bytes(cfg: ModelConfig, batch: int, seq_len: int) -> int:
+    """Total decode-cache bytes for ``batch`` backbone streams."""
+    by = _dtype_bytes(cfg.dtype)
+    total = 0
+    for kind in cfg.layer_kinds():
+        mixer = kind["mixer"]
+        if mixer == "attn":
+            slots = min(kind["window"], seq_len) if kind["window"] else seq_len
+            total += batch * slots * cfg.n_kv_heads * cfg.head_dim_ * 2 * by
+            total += batch * slots * 4  # pos int32
+        elif mixer == "mla":
+            m = cfg.mla
+            total += batch * seq_len * m.cache_width * by
+            total += batch * seq_len * 4
+        elif mixer == "mamba":
+            c = cfg.mamba
+            total += batch * c.d_inner * c.d_state * 4          # fp32 state
+            total += batch * (c.d_conv - 1) * c.d_inner * by
+        elif mixer == "mlstm":
+            c = cfg.xlstm
+            total += batch * c.n_heads * (c.head_dim ** 2 + c.head_dim + 1) * 4
+        elif mixer == "slstm":
+            total += batch * 4 * cfg.d_model * 4
+    if cfg.context_len:
+        # cross-attn K/V per cross layer
+        n_cross = sum(1 for k in cfg.layer_kinds() if k["cross"])
+        total += (batch * cfg.context_len * cfg.n_kv_heads * cfg.head_dim_
+                  * 2 * by * n_cross)
+    return total
+
+
+def cache_bytes_per_stream(cfg: ModelConfig, seq_len: int) -> float:
+    """Bytes per user stream — divided by mux.n when multiplexing shares the
+    cache (the beyond-paper serving result)."""
+    per_slot = cache_bytes(cfg, 1, seq_len + cfg.mux.prefix_len)
+    return per_slot / max(1, cfg.mux.n)

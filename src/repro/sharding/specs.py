@@ -1,0 +1,285 @@
+"""Per-tensor PartitionSpec rules for every model family + ZeRO-1 moments.
+
+Sharding plan (DESIGN.md §5):
+  * embeddings: vocab -> model axis
+  * attention: head projections -> model axis (Megatron TP)
+  * MLA: per-head up-projections -> model; low-rank latents replicated
+  * dense FFN: hidden -> model
+  * MoE: experts -> data (expert parallelism), expert FFN input-dim -> model
+  * Mamba: d_inner -> model
+  * xLSTM: replicated (125M; pure data parallelism — DESIGN.md)
+  * mux/demux: demux MLP hidden -> model, small tables replicated
+  * scanned blocks: leading (groups,) axis unsharded -> prepend None
+  * ZeRO-1: optimizer moments additionally shard their largest replicated
+    dim over the data axis when divisible (beyond-paper memory lever)
+
+Rules are matched on the parameter's key path, so they survive arbitrary
+nesting (head_layers / blocks / tail_layers / encoder)."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.nn.moe import MeshInfo
+
+
+def mesh_info_from_mesh(mesh) -> MeshInfo:
+    names = mesh.axis_names
+    sizes = dict(zip(names, mesh.devices.shape))
+    return MeshInfo(
+        data_axis="data", model_axis="model",
+        pod_axis="pod" if "pod" in names else None,
+        data_size=sizes.get("data", 1), model_size=sizes.get("model", 1),
+        pod_size=sizes.get("pod", 1))
+
+
+def batch_spec(mi: MeshInfo, *trailing):
+    return P(mi.batch_spec, *trailing)
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def _leaf_spec(s: str, leaf, mi: MeshInfo, *, moe_ep2d: bool = False) -> P:
+    """Base spec for an UNSTACKED leaf, matched by path suffix."""
+    model, data = mi.model_axis, mi.data_axis
+    nd = leaf.ndim
+
+    # ---- MoE ----
+    if "/moe/" in s or s.startswith("moe/"):
+        if moe_ep2d:   # experts over (data, model), full-d weights (§Perf A4b)
+            if s.endswith("up") or s.endswith("gate") or s.endswith("down"):
+                return P((data, model), None, None)
+        if s.endswith("router/w"):
+            return P(model, None)
+        if s.endswith("up") or s.endswith("gate"):
+            return P(data, model, None)
+        if s.endswith("down"):
+            return P(data, None, model)
+        if "/shared/" in s:  # shared expert = plain MLP
+            if "/up/" in s or "/gate/" in s:
+                return P(None, model) if nd == 2 else P(model)
+            if "/down/" in s:
+                return P(model, None) if nd == 2 else P()
+        return P(*([None] * nd))
+
+    # ---- xLSTM: replicate (small model, pure DP) ----
+    if "/mlstm/" in s or "/slstm/" in s:
+        return P(*([None] * nd))
+
+    # ---- Mamba ----
+    if "/mamba/" in s:
+        if s.endswith("in_proj/w"):
+            return P(None, model)
+        if s.endswith("conv_w"):
+            return P(None, model)
+        if s.endswith("conv_b") or s.endswith("D"):
+            return P(model)
+        if s.endswith("x_proj/w"):
+            return P(model, None)
+        if s.endswith("dt_proj/w"):
+            return P(None, model)
+        if s.endswith("dt_proj/b"):
+            return P(model)
+        if s.endswith("A_log"):
+            return P(model, None)
+        if s.endswith("out_proj/w"):
+            return P(model, None)
+        return P(*([None] * nd))
+
+    # ---- attention (incl. MLA & cross) ----
+    if "/attn/" in s or "/cross/" in s:
+        if s.endswith("wq/w") or s.endswith("wk/w") or s.endswith("wv/w"):
+            return P(None, model)
+        if s.endswith("wq/b") or s.endswith("wk/b") or s.endswith("wv/b"):
+            return P(model)
+        if s.endswith("wo/w"):
+            return P(model, None)
+        # MLA pieces
+        if s.endswith("wq_a/w") or s.endswith("wkv_a/w"):
+            return P(None, None)       # low-rank latents replicated
+        if s.endswith("wq_b/w") or s.endswith("wk_b/w") or \
+                s.endswith("wv_b/w"):
+            return P(None, model)      # per-head expansions sharded on heads
+        return P(*([None] * nd))
+
+    # ---- dense FFN ----
+    if "/mlp/" in s or "/ffn/" in s:
+        if "/up/" in s or "/gate/" in s:
+            return P(None, model) if nd == 2 else P(model)
+        if "/down/" in s:
+            return P(model, None) if nd == 2 else P()
+        # demux SharedMLPStack layers l0..lk handled below
+    if "/mlp/l" in s or "demux" in s and "/l" in s:
+        pass
+
+    # ---- embeddings / lm head ----
+    if s.endswith("embed/table"):
+        return P(model, None)          # vocab-sharded
+    if s.endswith("lm_head/w"):
+        return P(None, model)
+    if s.endswith("lm_head/b"):
+        return P(model)
+
+    # ---- DataMUX ----
+    if s.startswith("mux/") or "/mux/" in s:
+        if s.endswith("o"):            # ortho matrices (N, d, d)
+            return P(None, None, model)
+        return P(*([None] * nd))
+    if "demux" in s:
+        if s.endswith("l0/w"):         # (2d, hidden) first demux layer
+            return P(None, model)
+        if s.endswith("l0/b"):
+            return P(model)
+        if "/mlps/" in s:              # per-index MLPs stacked over N
+            if s.endswith("l0/w"):
+                return P(None, None, model)
+            if s.endswith("/w") and nd == 3:
+                return P(None, model, None)
+            return P(*([None] * nd))
+        if s.endswith("/w") and nd == 2:   # later demux layers (hidden, d)
+            return P(model, None)
+        if s.endswith("/b"):
+            return P()
+        return P(*([None] * nd))
+
+    # ---- demux shared-MLP inside SharedMLPStack key layout (mlp/l0/w) ----
+    if "/l0/w" in s and nd == 2:
+        return P(None, model)
+    if "/l0/b" in s:
+        return P(model)
+    if ("/l1/w" in s or "/l2/w" in s) and nd == 2:
+        return P(model, None)
+
+    # ---- norms, scalars, everything else: replicated ----
+    return P(*([None] * nd))
+
+
+def _axis_size(entry, mi: MeshInfo) -> int:
+    sizes = {mi.data_axis: mi.data_size, mi.model_axis: mi.model_size}
+    if mi.pod_axis:
+        sizes[mi.pod_axis] = mi.pod_size
+    names = entry if isinstance(entry, tuple) else (entry,)
+    prod = 1
+    for nm in names:
+        prod *= sizes.get(nm, 1)
+    return prod
+
+
+def sanitize_spec(spec, shape, mi: MeshInfo) -> P:
+    """Drop sharding on dims the mesh does not divide (e.g. whisper's
+    51865-row vocab on a 16-way model axis) — replicate instead of failing."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, e in zip(shape, entries):
+        if e is not None and dim % _axis_size(e, mi) != 0:
+            e = None
+        out.append(e)
+    return P(*out)
+
+
+def param_specs(params, mi: MeshInfo, *, moe_ep2d: bool = False):
+    """Pytree of PartitionSpecs matching ``params``.  Leaves under the
+    scanned ``blocks`` get a leading None for the stacked (groups,) axis;
+    per-index demux MLPs (stacked over N) are detected by path."""
+
+    def spec(path, leaf):
+        s = _path_str(path)
+        base = _leaf_spec(_strip_stack_prefixes(s), leaf_view(leaf, s), mi,
+                          moe_ep2d=moe_ep2d)
+        if _is_stacked(s):
+            return sanitize_spec(P(*((None,) + tuple(base))), leaf.shape, mi)
+        return sanitize_spec(base, leaf.shape, mi)
+
+    def _is_stacked(s: str) -> bool:
+        return s.startswith("blocks/") or "/blocks/" in s
+
+    def _strip_stack_prefixes(s: str) -> str:
+        return s
+
+    def leaf_view(leaf, s):
+        if _is_stacked(s):
+            class _V:  # shape view minus the stacked leading axis
+                ndim = leaf.ndim - 1
+            return _V()
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def opt_state_specs(opt_state, pspecs, mi: MeshInfo, *, zero1: bool = True):
+    """Moments mirror the param specs; with ZeRO-1, the largest replicated
+    dim additionally shards over the data axis when divisible."""
+
+    def extend(spec, leaf):
+        if not zero1 or leaf.ndim == 0:
+            return spec
+        used = set()
+        for e in spec:
+            for nm in (e if isinstance(e, tuple) else (e,)):
+                used.add(nm)
+        if mi.data_axis in used:  # already data-sharded (e.g. MoE experts)
+            return spec
+        entries = list(spec) + [None] * (leaf.ndim - len(spec))
+        # pick the largest dim that is currently unsharded & divisible
+        best, best_size = -1, 0
+        for i, (e, dim) in enumerate(zip(entries, leaf.shape)):
+            if e is None and dim % mi.data_size == 0 and dim > best_size \
+                    and dim >= mi.data_size * 2:
+                best, best_size = i, dim
+        if best >= 0:
+            entries[best] = mi.data_axis
+        return P(*entries)
+
+    mu = jax.tree.map(extend, pspecs, opt_state["mu"])
+    return {"mu": mu, "nu": jax.tree.map(lambda s: s, mu), "step": P()}
+
+
+def cache_specs(cache, mi: MeshInfo):
+    """Decode-cache shardings.  Sequence dim shards over ``model`` (flash-
+    decode style: softmax stats + tiny psum instead of a huge KV gather);
+    batch over (pod, data) when divisible; long_500k (batch=1) spreads the
+    sequence over BOTH axes so no chip idles on cache bytes."""
+    batch_axes = mi.batch_spec
+    batch_div = mi.data_size * mi.pod_size
+
+    def spec(path, leaf):
+        s = _path_str(path)
+        stacked = s.startswith("blocks/") or "/blocks/" in s
+        shape = leaf.shape[1:] if stacked else leaf.shape
+        name = s.rsplit("/", 1)[-1]
+        b = shape[0] if shape else 1
+        bs = batch_axes if (b % batch_div == 0 and b >= batch_div) else None
+        entries = [bs] + [None] * (len(shape) - 1)
+        if name in ("k", "v", "ckv", "krope", "pos") and len(shape) >= 2:
+            seq = shape[1]
+            if bs is None and seq % (batch_div * mi.model_size) == 0:
+                entries[1] = (mi.pod_axis, "data", "model") if mi.pod_axis \
+                    else ("data", "model")
+            elif seq % mi.model_size == 0 and seq >= mi.model_size:
+                # batch over (pod, data) AND sequence over model — without
+                # this the cache is replicated model_size× (§Perf C3)
+                entries[1] = mi.model_axis
+        elif name == "ssm" and len(shape) == 3:       # (B, d_inner, d_state)
+            if shape[1] % mi.model_size == 0:
+                entries[1] = mi.model_axis
+        elif name == "conv" and len(shape) == 3:      # (B, k-1, d_inner)
+            if shape[2] % mi.model_size == 0:
+                entries[2] = mi.model_axis
+        full = ([None] + entries) if stacked else entries
+        return P(*full)
+
+    return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+def state_specs(state, mi: MeshInfo, *, zero1: bool = True,
+                moe_ep2d: bool = False):
+    pspecs = param_specs(state["params"], mi, moe_ep2d=moe_ep2d)
+    return {
+        "params": pspecs,
+        "opt_state": opt_state_specs(state["opt_state"], pspecs, mi,
+                                     zero1=zero1),
+        "step": P(),
+    }

@@ -1,0 +1,4 @@
+from repro.training.trainer import TrainConfig, Trainer
+from repro.training import losses
+
+__all__ = ["TrainConfig", "Trainer", "losses"]

@@ -1,0 +1,47 @@
+"""Loss functions: task losses (LM / classification / tagging) + the paper's
+mixed objective  L = (1-α) L_task + α L_retrieval  (Eq. 4)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(logits, labels, mask=None):
+    """logits (..., C) fp-any; labels (...) int. Mean NLL over mask."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None].astype(jnp.int32),
+                               axis=-1)[..., 0]
+    if mask is None:
+        return jnp.mean(nll)
+    m = mask.astype(jnp.float32)
+    return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+def accuracy(logits, labels, mask=None):
+    pred = jnp.argmax(logits, axis=-1)
+    ok = (pred == labels).astype(jnp.float32)
+    if mask is None:
+        return jnp.mean(ok)
+    m = mask.astype(jnp.float32)
+    return jnp.sum(ok * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+def lm_loss(logits, tokens):
+    """Next-token loss.  Works for (B, L, V) and muxed (B, N, L, V) — each
+    stream predicts its own next token from the demuxed states."""
+    return cross_entropy(logits[..., :-1, :], tokens[..., 1:]), \
+        accuracy(logits[..., :-1, :], tokens[..., 1:])
+
+
+def cls_loss(demuxed, head_w, labels):
+    """Sequence classification from the [CLS] (position-0) demuxed state.
+    demuxed (B, [N,] L, d); labels (B[, N])."""
+    cls = demuxed[..., 0, :]
+    logits = cls.astype(jnp.float32) @ head_w.astype(jnp.float32)
+    return cross_entropy(logits, labels), accuracy(logits, labels)
+
+
+def tag_loss(demuxed, head_w, labels):
+    """Token-level classification (NER proxy). labels (B, [N,] L)."""
+    logits = demuxed.astype(jnp.float32) @ head_w.astype(jnp.float32)
+    return cross_entropy(logits, labels), accuracy(logits, labels)

@@ -1,0 +1,191 @@
+"""Training loop: pjit-able train_step with the paper's mixed objective.
+
+The step factory closes over (ModelConfig, TrainConfig, optimizer, mesh);
+state is a plain dict pytree {params, opt_state, step} so it shards via
+repro/sharding specs (incl. ZeRO-1 moments).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import retrieval as retr
+from repro.models import Backbone
+from repro.nn.moe import SINGLE, MeshInfo
+from repro.optim import AdamW, apply_updates, clip_by_global_norm
+from repro.training import losses
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    task: str = "lm"            # lm | cls | tag | retrieval
+    n_classes: int = 0          # cls/tag head width
+    lr: float = 5e-5            # paper A.9 default for multiplexed models
+    warmup: int = 100
+    total_steps: int = 1000
+    grad_clip: float = 1.0
+    weight_decay: float = 0.01
+    moe_aux_coef: float = 0.01
+    state_dtype: Optional[str] = None  # bf16 moments for 100B+ configs
+    microbatch: int = 0   # >1: split the batch into k chunks and accumulate
+                          # grads (scan) — activation memory ∝ 1/k (§Perf D2)
+
+
+class Trainer:
+    @staticmethod
+    def make_optimizer(tcfg: TrainConfig):
+        from repro.optim.schedule import linear_warmup_cosine
+        return AdamW(lr=linear_warmup_cosine(tcfg.lr, tcfg.warmup,
+                                             tcfg.total_steps),
+                     weight_decay=tcfg.weight_decay,
+                     state_dtype=tcfg.state_dtype)
+
+    @staticmethod
+    def init_state(key, cfg: ModelConfig, tcfg: TrainConfig):
+        k1, k2 = jax.random.split(key)
+        params = Backbone.init(k1, cfg)
+        if tcfg.task in ("cls", "tag"):
+            assert tcfg.n_classes > 0, "cls/tag task needs n_classes"
+            params["task_head"] = {
+                "w": 0.02 * jax.random.normal(
+                    k2, (cfg.d_model, tcfg.n_classes), jnp.float32
+                ).astype(cfg.pdtype)}
+        opt = Trainer.make_optimizer(tcfg)
+        return {"params": params, "opt_state": opt.init(params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    # -- loss ------------------------------------------------------------------
+
+    @staticmethod
+    def loss_fn(params, batch, rng, cfg: ModelConfig, tcfg: TrainConfig, *,
+                mesh=None, mesh_info: MeshInfo = SINGLE):
+        tokens = batch["tokens"]
+        out = Backbone.apply(params, tokens, cfg,
+                             context=batch.get("context"),
+                             mesh=mesh, mesh_info=mesh_info)
+        metrics = {}
+        mux = cfg.mux
+
+        if tcfg.task == "lm":
+            task_loss, acc = losses.lm_loss(out["logits"], tokens)
+        elif tcfg.task == "cls":
+            task_loss, acc = losses.cls_loss(
+                out["demuxed"], params["task_head"]["w"], batch["labels"])
+        elif tcfg.task == "tag":
+            task_loss, acc = losses.tag_loss(
+                out["demuxed"], params["task_head"]["w"], batch["labels"])
+        elif tcfg.task == "retrieval":
+            task_loss = jnp.zeros((), jnp.float32)
+            acc = jnp.zeros((), jnp.float32)
+        else:
+            raise ValueError(tcfg.task)
+
+        # retrieval auxiliary objective (paper Eq. 3/4) — only meaningful for
+        # muxed models; the demuxed states must reconstruct the inputs.
+        alpha = mux.retrieval_alpha if (mux.active or
+                                        tcfg.task == "retrieval") else 0.0
+        if tcfg.task == "retrieval":
+            alpha = 1.0
+        if alpha > 0.0 and mux.active:
+            retr_loss = retr.retrieval_loss(
+                rng, out["demuxed"], tokens, params["embed"]["table"])
+        else:
+            retr_loss = jnp.zeros((), jnp.float32)
+
+        total = (1.0 - alpha) * task_loss + alpha * retr_loss \
+            + tcfg.moe_aux_coef * out["aux"]
+        metrics.update(task_loss=task_loss, retr_loss=retr_loss,
+                       moe_aux=out["aux"], acc=acc)
+        return total, metrics
+
+    # -- step factories -----------------------------------------------------------
+
+    @staticmethod
+    def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, *, mesh=None,
+                        mesh_info: MeshInfo = SINGLE, donate: bool = True):
+        opt = Trainer.make_optimizer(tcfg)
+
+        def grad_fn(params, batch, rng):
+            return jax.value_and_grad(Trainer.loss_fn, has_aux=True)(
+                params, batch, rng, cfg, tcfg, mesh=mesh,
+                mesh_info=mesh_info)
+
+        def train_step(state, batch, rng):
+            k = tcfg.microbatch
+            if k and k > 1:
+                # gradient accumulation: scan over k microbatches so only
+                # one microbatch's activations are live at a time
+                mb = jax.tree.map(
+                    lambda a: a.reshape(k, a.shape[0] // k, *a.shape[1:]),
+                    batch)
+                rngs = jax.random.split(rng, k)
+
+                def acc(carry, xs):
+                    g_acc, l_acc, m_acc = carry
+                    b_i, r_i = xs
+                    (l, m), g = grad_fn(state["params"], b_i, r_i)
+                    return (jax.tree.map(jnp.add, g_acc, g), l_acc + l,
+                            jax.tree.map(jnp.add, m_acc, m)), None
+
+                # all k chunks inside the scan — an unrolled first chunk
+                # would keep its full activations live alongside the scan's
+                (l_s, m_s), g_s = jax.eval_shape(
+                    grad_fn, state["params"],
+                    jax.tree.map(lambda a: a[0], mb), rngs[0])
+                init = (jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                     g_s),
+                        jnp.zeros(l_s.shape, l_s.dtype),
+                        jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                     m_s))
+                (g_sum, l_sum, m_sum), _ = jax.lax.scan(
+                    acc, init, (mb, rngs))
+                grads = jax.tree.map(lambda g: g / k, g_sum)
+                loss = l_sum / k
+                metrics = jax.tree.map(lambda m: m / k, m_sum)
+            else:
+                (loss, metrics), grads = grad_fn(state["params"], batch, rng)
+            grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+            updates, opt_state = opt.update(grads, state["opt_state"],
+                                            state["params"])
+            params = apply_updates(state["params"], updates)
+            metrics.update(loss=loss, grad_norm=gnorm)
+            return ({"params": params, "opt_state": opt_state,
+                     "step": state["step"] + 1}, metrics)
+
+        return train_step
+
+    @staticmethod
+    def make_eval_step(cfg: ModelConfig, tcfg: TrainConfig, *, mesh=None,
+                       mesh_info: MeshInfo = SINGLE):
+        def eval_step(params, batch, rng):
+            loss, metrics = Trainer.loss_fn(params, batch, rng, cfg, tcfg,
+                                            mesh=mesh, mesh_info=mesh_info)
+            metrics["loss"] = loss
+            return metrics
+
+        return eval_step
+
+    # -- convenience loop (CPU-scale experiments / examples) -----------------------
+
+    @staticmethod
+    def fit(key, cfg: ModelConfig, tcfg: TrainConfig, batch_iter, *,
+            log_every: int = 50, state=None, callback=None):
+        key, init_key = jax.random.split(key)
+        state = state or Trainer.init_state(init_key, cfg, tcfg)
+        step_fn = jax.jit(Trainer.make_train_step(cfg, tcfg))
+        history = []
+        for i, batch in enumerate(batch_iter):
+            key, rng = jax.random.split(key)
+            jb = {k: jnp.asarray(v) for k, v in batch.items()}
+            state, metrics = step_fn(state, jb, rng)
+            if i % log_every == 0 or i == tcfg.total_steps - 1:
+                m = {k: float(v) for k, v in metrics.items()}
+                history.append({"step": i, **m})
+                if callback:
+                    callback(i, m)
+        return state, history

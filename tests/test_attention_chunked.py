@@ -1,0 +1,106 @@
+"""Chunked (flash-style, pure-XLA) attention vs dense oracle + the
+prefix-pad mesh-divisibility option (§Perf levers A1/A2)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import MuxConfig
+from repro.configs.registry import get_smoke_config
+from repro.models import Backbone
+from repro.nn import attention as A
+
+
+@pytest.mark.parametrize("causal,window", [(True, None), (False, None),
+                                           (True, 64), (True, 7)])
+@pytest.mark.parametrize("chunk", [64, 128, 100])
+def test_chunked_matches_dense(key, causal, window, chunk):
+    B, L, H, hd = 2, 300, 4, 32
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, L, H, hd))
+    k = jax.random.normal(ks[1], (B, L, H, hd))
+    v = jax.random.normal(ks[2], (B, L, H, hd))
+    pos = jnp.broadcast_to(jnp.arange(L), (B, L))
+    mask = A.make_attention_mask(pos, pos, causal=causal, window=window)
+    want = A.dot_product_attention(q, k, v, mask, 0.17)
+    got = A.chunked_dot_product_attention(q, k, v, pos, pos, 0.17,
+                                          causal=causal, window=window,
+                                          chunk=chunk)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_chunked_mixed_head_dims(key):
+    """MLA: qk_head_dim != v_head_dim."""
+    B, L, H = 1, 200, 2
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, L, H, 48))
+    k = jax.random.normal(ks[1], (B, L, H, 48))
+    v = jax.random.normal(ks[2], (B, L, H, 16))
+    pos = jnp.broadcast_to(jnp.arange(L), (B, L))
+    mask = A.make_attention_mask(pos, pos, causal=True, window=None)
+    want = A.dot_product_attention(q, k, v, mask, 0.2)
+    got = A.chunked_dot_product_attention(q, k, v, pos, pos, 0.2,
+                                          causal=True, window=None, chunk=64)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_chunked_respects_k_valid(key):
+    B, L = 1, 130
+    q = jax.random.normal(key, (B, L, 2, 16))
+    pos = jnp.broadcast_to(jnp.arange(L), (B, L))
+    valid = jnp.arange(L)[None, :] < 100
+    mask = A.make_attention_mask(pos, pos, causal=True, window=None,
+                                 k_valid=valid)
+    want = A.dot_product_attention(q, q, q, mask, 0.2)
+    got = A.chunked_dot_product_attention(q, q, q, pos, pos, 0.2,
+                                          causal=True, window=None,
+                                          k_valid=valid, chunk=32)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_attention_module_uses_chunked_above_threshold(key, monkeypatch):
+    """Dense and chunked paths agree through the Attention module."""
+    monkeypatch.setattr(A, "CHUNKED_ATTN_THRESHOLD", 64)
+    cfg = A.AttnConfig(dim=64, n_heads=4, n_kv_heads=2, head_dim=16)
+    p = A.Attention.init(key, cfg)
+    x = jax.random.normal(key, (2, 100, 64))
+    pos = jnp.broadcast_to(jnp.arange(100), (2, 100))
+    out_chunked, _ = A.Attention.apply(p, x, cfg, positions=pos)
+    monkeypatch.setattr(A, "CHUNKED_ATTN_THRESHOLD", 10_000)
+    out_dense, _ = A.Attention.apply(p, x, cfg, positions=pos)
+    np.testing.assert_allclose(out_chunked, out_dense, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# prefix padding (mesh-divisible mixed-stream length)
+# ---------------------------------------------------------------------------
+
+def test_prefix_pad_length():
+    mux = MuxConfig(n=8, prefix_pad=16)
+    assert mux.prefix_len == 16
+    mux = MuxConfig(n=20, prefix_pad=16)
+    assert mux.prefix_len == 32
+    assert MuxConfig(n=8).prefix_len == 8  # paper-faithful default
+
+
+def test_prefix_pad_forward_and_train(key):
+    cfg = get_smoke_config("qwen1.5-4b", mux_n=3)
+    cfg = dataclasses.replace(
+        cfg, mux=dataclasses.replace(cfg.mux, prefix_pad=8))
+    assert cfg.mux.prefix_len == 8
+    params = Backbone.init(key, cfg)
+    toks = jax.random.randint(key, (2, 3, 12), 0, cfg.vocab)
+    out = Backbone.apply(params, toks, cfg)
+    assert out["logits"].shape == (2, 3, 12, cfg.vocab)
+    assert out["index_embeds"].shape == (2, 3, cfg.d_model)
+    assert not bool(jnp.isnan(out["logits"]).any())
+
+    def loss(p):
+        o = Backbone.apply(p, toks, cfg)
+        return jnp.mean(o["logits"].astype(jnp.float32) ** 2)
+
+    g = jax.grad(loss)(params)
+    gmax = max(float(jnp.abs(x).max()) for x in jax.tree.leaves(g))
+    assert np.isfinite(gmax) and gmax > 0

@@ -1,0 +1,40 @@
+"""Checkpoint roundtrip: exact dtype/shape restoration incl. bf16."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.io import load_checkpoint, save_checkpoint
+from repro.configs.registry import get_smoke_config
+from repro.models import Backbone
+from repro.training.trainer import Trainer, TrainConfig
+
+
+def test_roundtrip_mixed_dtypes(key, tmp_path):
+    tree = {
+        "a": jax.random.normal(key, (3, 5)),
+        "nested": {"b": jnp.arange(7, dtype=jnp.int32),
+                   "c": jax.random.normal(key, (2, 2)).astype(jnp.bfloat16)},
+        "lst": [jnp.ones((2,)), jnp.zeros((1,), jnp.int32)],
+    }
+    path = str(tmp_path / "ck.npz")
+    save_checkpoint(path, tree, step=42, meta={"note": "x"})
+    restored, meta = load_checkpoint(path, tree)
+    assert meta["step"] == 42 and meta["note"] == "x"
+    for want, got in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        assert want.dtype == got.dtype and want.shape == got.shape
+        np.testing.assert_array_equal(np.asarray(want, np.float32),
+                                      np.asarray(got, np.float32))
+
+
+def test_train_state_roundtrip(key, tmp_path):
+    cfg = get_smoke_config("tmux-4l-768h", mux_n=2)
+    tcfg = TrainConfig(task="lm", total_steps=10)
+    state = Trainer.init_state(key, cfg, tcfg)
+    path = str(tmp_path / "state.npz")
+    save_checkpoint(path, state, step=0)
+    restored, _ = load_checkpoint(path, state)
+    # resume training from restored state
+    step = jax.jit(Trainer.make_train_step(cfg, tcfg))
+    batch = {"tokens": jax.random.randint(key, (2, 2, 8), 0, cfg.vocab)}
+    state2, metrics = step(restored, batch, key)
+    assert np.isfinite(float(metrics["loss"]))

@@ -1,0 +1,49 @@
+"""Dry-run machinery smoke: one (reduced-config) lower+compile per step kind
+on the production 256-chip mesh, in a subprocess (XLA device-count flag must
+precede jax init).  The full-config 40-pair sweep is the deliverable run by
+``launch/sweep.sh``; this test proves the machinery itself stays green."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(arch, shape, mesh="pod", mux_n=4):
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--mesh", mesh, "--mux-n", str(mux_n),
+         "--smoke", "--out", ""],
+        capture_output=True, text=True, timeout=900, cwd=ROOT, env=env)
+    assert out.returncode == 0, out.stderr[-2000:] + out.stdout[-500:]
+    return out.stdout
+
+
+@pytest.mark.parametrize("shape", ["train_4k", "decode_32k"])
+def test_dryrun_smoke_qwen(shape):
+    stdout = _run("qwen1.5-4b", shape)
+    assert "[dryrun]" in stdout and "bound" in stdout
+
+
+def test_dryrun_smoke_multipod():
+    stdout = _run("gemma3-4b", "train_4k", mesh="multipod")
+    assert "[dryrun]" in stdout and "bound" in stdout
+
+
+def test_dryrun_records_exist_or_skip():
+    """If the full sweep has run, sanity-check the record schema."""
+    d = os.path.join(ROOT, "results", "dryrun")
+    if not os.path.isdir(d) or not os.listdir(d):
+        pytest.skip("full sweep not run yet")
+    import glob
+    recs = [json.load(open(p)) for p in glob.glob(os.path.join(d, "*.json"))]
+    done = [r for r in recs if not r.get("skipped")]
+    assert done, "no successful dry-run records"
+    for r in done:
+        for k in ("compute_s", "memory_s", "collective_s", "dominant",
+                  "hlo_flops", "collective_bytes"):
+            assert k in r, (r.get("arch"), k)

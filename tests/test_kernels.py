@@ -1,0 +1,102 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.attention import kernel as att_kernel, ref as att_ref
+from repro.kernels.demux import kernel as demux_kernel, ref as demux_ref
+from repro.kernels.multiplex import kernel as mux_kernel, ref as mux_ref
+from repro.nn.layers import SharedMLPStack
+
+TOLS = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+        jnp.bfloat16: dict(rtol=4e-2, atol=4e-2)}
+
+
+def _tol(dtype):
+    return TOLS[jnp.bfloat16 if dtype == jnp.bfloat16 else jnp.float32]
+
+
+# ---------------------------------------------------------------------------
+# fused Hadamard multiplexer
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,n,l,d", [
+    (1, 2, 8, 128),      # exact tile
+    (2, 5, 33, 192),     # ragged L and d
+    (1, 40, 17, 96),     # paper's max N, sub-tile d
+    (3, 10, 130, 512),   # multi-tile both axes
+])
+def test_mux_kernel_allclose(key, b, n, l, d, dtype):
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (b, n, l, d)).astype(dtype)
+    v = jax.random.normal(k2, (n, d)).astype(dtype)
+    got = mux_kernel.hadamard_mux(x, v, interpret=True)
+    want = mux_ref.hadamard_mux(x, v)
+    assert got.dtype == want.dtype and got.shape == want.shape
+    np.testing.assert_allclose(got.astype(np.float32),
+                               want.astype(np.float32), **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# fused index-embed demux MLP
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,n,l,d,hidden", [
+    (1, 2, 8, 64, 128),     # exact tiles
+    (2, 3, 17, 96, 160),    # ragged everywhere
+    (1, 8, 64, 128, 640),   # multi H-block accumulation
+])
+def test_demux_kernel_allclose(key, b, n, l, d, hidden, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    mlp = SharedMLPStack.init(k1, [2 * d, hidden, d])
+    mlp = jax.tree.map(lambda a: a.astype(dtype), mlp)
+    h = jax.random.normal(k2, (b, l, d)).astype(dtype)
+    p = jax.random.normal(k3, (b, n, d)).astype(dtype)
+    got = demux_kernel.index_embed_demux(mlp, h, p, interpret=True)
+    want = demux_ref.index_embed_demux(mlp, h, p)
+    assert got.shape == (b, n, l, d)
+    np.testing.assert_allclose(got.astype(np.float32),
+                               want.astype(np.float32), **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,l,h,hd", [
+    (1, 8, 1, 64),       # single tile
+    (2, 37, 4, 64),      # ragged L
+    (1, 256, 2, 128),    # exact multi-tile
+    (1, 520, 2, 64),     # pad + many K blocks
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_allclose(key, b, l, h, hd, dtype, causal):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, l, h, hd)).astype(dtype)
+    k = jax.random.normal(ks[1], (b, l, h, hd)).astype(dtype)
+    v = jax.random.normal(ks[2], (b, l, h, hd)).astype(dtype)
+    got = att_kernel.flash_attention(q, k, v, causal=causal, interpret=True)
+    want = att_ref.flash_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(got.astype(np.float32),
+                               want.astype(np.float32), **_tol(dtype))
+
+
+def test_flash_matches_scale_override(key):
+    q = jax.random.normal(key, (1, 32, 2, 64))
+    got = att_kernel.flash_attention(q, q, q, causal=True, scale=0.05,
+                                     interpret=True)
+    want = att_ref.flash_attention(q, q, q, causal=True, scale=0.05)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_long_context_numerics(key):
+    """Online softmax must be stable with large-magnitude logits."""
+    q = 8.0 * jax.random.normal(key, (1, 128, 1, 64))
+    got = att_kernel.flash_attention(q, q, q, causal=True, interpret=True)
+    assert bool(jnp.isfinite(got).all())
+    want = att_ref.flash_attention(q, q, q, causal=True)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

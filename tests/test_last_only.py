@@ -1,0 +1,27 @@
+"""last_only prefill (§Perf A5): logits equal the full forward's final
+position, for muxed and unmuxed models."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_smoke_config
+from repro.models import Backbone
+
+
+@pytest.mark.parametrize("mux_n", [1, 3])
+def test_last_only_matches_full(key, mux_n):
+    cfg = get_smoke_config("qwen1.5-4b", mux_n=mux_n)
+    params = Backbone.init(key, cfg)
+    shape = (2, mux_n, 12) if mux_n > 1 else (2, 12)
+    toks = jax.random.randint(key, shape, 0, cfg.vocab)
+    full = Backbone.apply(params, toks, cfg)
+    last = Backbone.apply(params, toks, cfg, last_only=True)
+    np.testing.assert_allclose(
+        np.asarray(last["logits"][..., -1, :]),
+        np.asarray(full["logits"][..., -1, :]), rtol=1e-5, atol=1e-5)
+    assert last["logits"].shape[-2] == 1
+    if mux_n > 1:
+        np.testing.assert_allclose(np.asarray(last["index_embeds"]),
+                                   np.asarray(full["index_embeds"]),
+                                   rtol=1e-6)

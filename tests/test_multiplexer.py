@@ -1,0 +1,151 @@
+"""Multiplexer Φ (paper Sec 3.1 / A.5): strategy semantics + invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import MuxConfig
+from repro.core.multiplexer import Multiplexer
+
+STRATEGIES = ["hadamard", "ortho", "lowrank", "binary", "identity"]
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+@pytest.mark.parametrize("n", [2, 5, 8])
+def test_shapes_and_finite(key, strategy, n):
+    d = 64
+    cfg = MuxConfig(n=n, strategy=strategy)
+    params = Multiplexer.init(key, cfg, d)
+    x = jax.random.normal(key, (3, n, 7, d))
+    out = Multiplexer.apply(params, x, cfg)
+    assert out.shape == (3, 7, d)
+    assert jnp.isfinite(out).all()
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_linearity(key, strategy):
+    """Φ is linear in each instance (Eq. 1 is a fixed linear map + mean)."""
+    n, d = 4, 32
+    cfg = MuxConfig(n=n, strategy=strategy)
+    params = Multiplexer.init(key, cfg, d)
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (2, n, 5, d))
+    y = jax.random.normal(k2, (2, n, 5, d))
+    lhs = Multiplexer.apply(params, 2.0 * x - 3.0 * y, cfg)
+    rhs = 2.0 * Multiplexer.apply(params, x, cfg) \
+        - 3.0 * Multiplexer.apply(params, y, cfg)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("strategy", ["hadamard", "ortho", "lowrank", "binary"])
+def test_order_dependence(key, strategy):
+    """Unlike the identity baseline, real strategies distinguish instance
+    order — swapping two instances changes the mixture (Sec 3.1)."""
+    n, d = 4, 32
+    cfg = MuxConfig(n=n, strategy=strategy)
+    params = Multiplexer.init(key, cfg, d)
+    x = jax.random.normal(key, (1, n, 3, d))
+    x_swapped = x[:, jnp.array([1, 0, 2, 3])]
+    a = Multiplexer.apply(params, x, cfg)
+    b = Multiplexer.apply(params, x_swapped, cfg)
+    assert float(jnp.abs(a - b).max()) > 1e-3
+
+
+def test_identity_is_order_invariant(key):
+    n, d = 4, 32
+    cfg = MuxConfig(n=n, strategy="identity")
+    params = Multiplexer.init(key, cfg, d)
+    x = jax.random.normal(key, (1, n, 3, d))
+    x_swapped = x[:, jnp.array([1, 0, 2, 3])]
+    np.testing.assert_allclose(Multiplexer.apply(params, x, cfg),
+                               Multiplexer.apply(params, x_swapped, cfg),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_ortho_matrices_are_orthogonal(key):
+    cfg = MuxConfig(n=3, strategy="ortho")
+    params = Multiplexer.init(key, cfg, 48)
+    for o in params["o"]:
+        np.testing.assert_allclose(o @ o.T, np.eye(48), atol=1e-5)
+
+
+def test_ortho_preserves_norm_per_instance(key):
+    """φ^i orthogonal ⇒ ||φ^i(x)|| = ||x||."""
+    cfg = MuxConfig(n=3, strategy="ortho")
+    d = 48
+    params = Multiplexer.init(key, cfg, d)
+    x = jax.random.normal(key, (2, 3, 5, d))
+    t = Multiplexer.transform(params, x, cfg)
+    np.testing.assert_allclose(jnp.linalg.norm(t, axis=-1),
+                               jnp.linalg.norm(x, axis=-1), rtol=1e-4)
+
+
+def test_binary_chunks_are_disjoint(key):
+    n, d = 4, 64
+    cfg = MuxConfig(n=n, strategy="binary")
+    params = Multiplexer.init(key, cfg, d)
+    m = np.asarray(params["mask"])
+    assert m.sum() == d  # chunks partition the dimension
+    assert (m.sum(axis=0) <= 1).all()
+
+
+def test_binary_mux_is_lossless_concat(key):
+    """Binary masking = concatenating d/N-downsampled inputs: the mixture
+    restricted to chunk i equals x^i/N on that chunk (paper A.5)."""
+    n, d = 4, 64
+    cfg = MuxConfig(n=n, strategy="binary")
+    params = Multiplexer.init(key, cfg, d)
+    x = jax.random.normal(key, (1, n, 2, d))
+    out = Multiplexer.apply(params, x, cfg)
+    r = d // n
+    for i in range(n):
+        np.testing.assert_allclose(out[0, :, i * r:(i + 1) * r],
+                                   x[0, i, :, i * r:(i + 1) * r] / n,
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_fixed_transform_blocks_gradient(key):
+    """φ is frozen by default (stop_gradient); learned=True unfreezes
+    (paper A.5 'Learned')."""
+    cfg = MuxConfig(n=2, strategy="hadamard")
+    params = Multiplexer.init(key, cfg, 16)
+    x = jax.random.normal(key, (1, 2, 3, 16))
+
+    def loss(p, learned):
+        c = MuxConfig(n=2, strategy="hadamard", learned=learned)
+        return jnp.sum(Multiplexer.apply(p, x, c) ** 2)
+
+    g_frozen = jax.grad(loss)(params, False)["v"]
+    g_learned = jax.grad(loss)(params, True)["v"]
+    assert float(jnp.abs(g_frozen).max()) == 0.0
+    assert float(jnp.abs(g_learned).max()) > 0.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 8), seed=st.integers(0, 2**30))
+def test_property_mean_of_transforms(n, seed):
+    """Φ(x) == mean_i φ^i(x^i) for every strategy-independent seed/N."""
+    d = 32
+    key = jax.random.PRNGKey(seed)
+    cfg = MuxConfig(n=n, strategy="hadamard")
+    params = Multiplexer.init(key, cfg, d)
+    x = jax.random.normal(key, (1, n, 2, d))
+    t = Multiplexer.transform(params, x, cfg)
+    np.testing.assert_allclose(Multiplexer.apply(params, x, cfg),
+                               t.mean(axis=1), rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**30))
+def test_property_hadamard_scale_equivariance(seed):
+    """Hadamard mux commutes with per-instance scaling."""
+    key = jax.random.PRNGKey(seed)
+    cfg = MuxConfig(n=3, strategy="hadamard")
+    params = Multiplexer.init(key, cfg, 16)
+    x = jax.random.normal(key, (1, 3, 2, 16))
+    s = jnp.array([2.0, -1.0, 0.5])
+    lhs = Multiplexer.apply(params, x * s[None, :, None, None], cfg)
+    t = Multiplexer.transform(params, x, cfg)
+    rhs = (t * s[None, :, None, None]).mean(axis=1)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-5, atol=1e-6)

@@ -1,0 +1,81 @@
+"""Numerical property checks of the paper's §4.4 / A.3 construction:
+self-attention weights with per-index singular subspaces process N streams
+without interference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import theory
+
+
+@pytest.mark.parametrize("n", [2, 4])
+def test_value_subspace_independence(key, n):
+    """(i)  <W_V u^(k), W_V u^(k')> ≈ 0 for k != k'  (paper Eq. 6)."""
+    d = 64
+    k1, k2, k3 = jax.random.split(key, 3)
+    basis = theory.make_subspace_basis(k1, d, n)
+    wv = theory.make_value_matrix(k2, basis, n)
+    x = jax.random.normal(k3, (n, 8, d))
+    u = jnp.stack([theory.project_to_subspace(x[k], basis, k, n)
+                   for k in range(n)])            # (N, L, d)
+    v = jnp.einsum("nld,ed->nle", u, wv)
+    for a in range(n):
+        for b in range(a + 1, n):
+            dots = jnp.abs(jnp.einsum("ld,md->lm", v[a], v[b]))
+            assert float(dots.max()) < 1e-4
+
+
+@pytest.mark.parametrize("n", [2, 4])
+def test_qk_decomposes_into_per_stream_tau(key, n):
+    """(ii)  (W_K w^{1:N})ᵀ(W_Q w^{1:N}) = Σ_k τ^(k)  (paper Eq. 7/18)."""
+    d, L = 64, 6
+    k1, k2, k3 = jax.random.split(key, 3)
+    basis = theory.make_subspace_basis(k1, d, n)
+    wq, wk = theory.make_qk_matrices(k2, basis, n)
+    x = jax.random.normal(k3, (n, L, d))
+    u = jnp.stack([theory.project_to_subspace(x[k], basis, k, n)
+                   for k in range(n)])
+    mixed = u.sum(axis=0)                          # w^{1:N} (scaled by N)
+    full = (mixed @ wk.T) @ (mixed @ wq.T).T       # (L, L)
+    tau_sum = sum(theory.qk_tau(wq, wk, u[k]) for k in range(n))
+    np.testing.assert_allclose(full, tau_sum, rtol=1e-3, atol=1e-3)
+
+
+def test_head_specialisation(key):
+    """(iii) zeroing singular values outside subspace k ⇒ the head's
+    attention pattern equals the single-stream pattern (paper's
+    'perfect non-interference in retrieval' option)."""
+    n, d, L = 4, 64, 8
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    basis = theory.make_subspace_basis(k1, d, n)
+    focus = 2
+    wq, wk = theory.make_qk_matrices(k2, basis, n, focus=focus)
+    wv = theory.make_value_matrix(k3, basis, n)
+    x = jax.random.normal(k4, (n, L, d))
+    u = jnp.stack([theory.project_to_subspace(x[k], basis, k, n)
+                   for k in range(n)])
+    mixed = u.sum(axis=0)
+    _, probs_mixed = theory.attention_head(wq, wk, wv, mixed)
+    _, probs_solo = theory.attention_head(wq, wk, wv, u[focus])
+    np.testing.assert_allclose(probs_mixed, probs_solo, rtol=1e-3, atol=1e-3)
+
+
+def test_projection_subspaces_are_orthogonal(key):
+    n, d = 4, 64
+    basis = theory.make_subspace_basis(key, d, n)
+    x = jax.random.normal(key, (5, d))
+    for a in range(n):
+        pa = theory.project_to_subspace(x, basis, a, n)
+        for b in range(a + 1, n):
+            pb = theory.project_to_subspace(x, basis, b, n)
+            assert float(jnp.abs(pa @ pb.T).max()) < 1e-4
+
+
+def test_projection_is_idempotent(key):
+    n, d = 4, 64
+    basis = theory.make_subspace_basis(key, d, n)
+    x = jax.random.normal(key, (5, d))
+    p1 = theory.project_to_subspace(x, basis, 1, n)
+    p2 = theory.project_to_subspace(p1, basis, 1, n)
+    np.testing.assert_allclose(p1, p2, rtol=1e-5, atol=1e-6)
