@@ -32,15 +32,30 @@ class MuxConfig:
     configured-but-inactive wrapper (identity semantics, used for baselines).
     """
     n: int = 1
-    strategy: str = "hadamard"   # hadamard | ortho | lowrank | binary | identity
+    strategy: str = "hadamard"   # any registered mux strategy (see
+                                 # repro.core.strategies; paper set: hadamard |
+                                 # ortho | lowrank | binary | identity)
     learned: bool = False        # unfreeze phi (paper A.5 "Learned")
-    demux: str = "index_embed"   # index_embed | mlp   (paper Sec 3.2)
+    demux: str = "index_embed"   # any registered demux strategy
+                                 # (index_embed | mlp — paper Sec 3.2)
     demux_hidden: int = 0        # 0 -> 2 * d_model
     demux_layers: int = 2
     retrieval_alpha: float = 0.1  # aux retrieval loss weight (paper Eq. 4)
-    use_kernel: bool = False      # fused Pallas multiplexer
+    use_kernel: bool = False      # fused Pallas mux/demux (strategies that
+                                  # implement kernel_apply)
     prefix_pad: int = 0           # pad prefix to a multiple (mesh-divisible
                                   # mixed-stream length; beyond-paper §Perf)
+
+    def __post_init__(self):
+        # Construction-time validation against the strategy registry, so a
+        # typo'd name fails here with the registered list instead of deep
+        # inside a jitted apply.  (Imported lazily: strategies depend on
+        # repro.nn, not the other way around.)
+        from repro.core import strategies
+        if self.n < 1:
+            raise ValueError(f"mux width n must be >= 1, got n={self.n}")
+        strategies.get_mux(self.strategy)    # raises listing registered names
+        strategies.get_demux(self.demux)
 
     @property
     def active(self) -> bool:
@@ -48,10 +63,12 @@ class MuxConfig:
 
     @property
     def prefix_len(self) -> int:
-        """Index-embedding demux prepends an N-token prefix (paper Sec 3.2).
-        With ``prefix_pad`` k > 0, the prefix is padded with ε^pad tokens to
-        a multiple of k so seq_len + prefix stays mesh-shardable."""
-        if not (self.active and self.demux == "index_embed"):
+        """Prefix-protocol demuxers (``uses_prefix``, e.g. index_embed)
+        prepend an N-token prefix (paper Sec 3.2).  With ``prefix_pad`` k > 0,
+        the prefix is padded with ε^pad tokens to a multiple of k so
+        seq_len + prefix stays mesh-shardable."""
+        from repro.core import strategies
+        if not (self.active and strategies.get_demux(self.demux).uses_prefix):
             return 0
         p = self.n
         if self.prefix_pad:
@@ -114,6 +131,15 @@ class ModelConfig:
                                      # model-sharded d (Megatron-SP; §Perf A3:
                                      # XLA emits reduce-scatter + all-gather
                                      # instead of all-reduce)
+
+    def __post_init__(self):
+        # MuxConfig validates names/n on its own; the width-dependent checks
+        # (e.g. binary needs d_model % n == 0, nonlinear needs square d_model)
+        # can only happen once the model width is known — here.
+        if self.mux.active:
+            from repro.core import strategies
+            strategies.get_mux(self.mux.strategy).validate(
+                self.mux, self.d_model)
 
     # -- derived -------------------------------------------------------------
 

@@ -1,12 +1,23 @@
 """DataMUX core: the paper's contribution as composable JAX modules.
 
-  * Multiplexer   — Sec 3.1: fixed per-index transform + position-wise average
-  * Demultiplexer — Sec 3.2: Index-Embedding (prefix) or per-index MLP demux
+  * strategies    — pluggable MuxStrategy/DemuxStrategy registry (Sec 3.1/3.2
+                    + beyond-paper schemes); the extension point
+  * Multiplexer   — Sec 3.1 compat shim: fixed per-index transform + average
+  * Demultiplexer — Sec 3.2 compat shim: Index-Embedding or per-index MLP
   * retrieval     — Sec 3.3: self-supervised retrieval warm-up objective
   * theory        — Sec 4.4 / A.3: subspace construction for attention
 """
-from repro.core.multiplexer import Multiplexer
-from repro.core.demultiplexer import Demultiplexer
 from repro.core import retrieval, theory
+from repro.core.demultiplexer import Demultiplexer
+from repro.core.multiplexer import Multiplexer
+from repro.core.strategies import (DemuxStrategy, MuxStrategy, get_demux,
+                                   get_mux, list_demux_strategies,
+                                   list_mux_strategies, register_demux,
+                                   register_mux)
 
-__all__ = ["Multiplexer", "Demultiplexer", "retrieval", "theory"]
+__all__ = [
+    "Multiplexer", "Demultiplexer", "retrieval", "theory",
+    "MuxStrategy", "DemuxStrategy",
+    "register_mux", "register_demux", "get_mux", "get_demux",
+    "list_mux_strategies", "list_demux_strategies",
+]

@@ -1,88 +1,36 @@
 """Demultiplexer (paper Sec 3.2): recover N per-instance hidden states from
 the backbone's mixed output h^{1:N}.
 
-Two strategies:
-  * "index_embed" — the paper's main method for Transformers.  Each instance
-    is prepended with prefix^i (index token ε^i at position i, ε^pad
-    elsewhere); the backbone's output at prefix position i is the index
-    embedding p^i, and a *shared* MLP on [h_j^{1:N} ; p^i] emits h_j^i.
-  * "mlp" — N independent MLPs, h^i = MLP^i(h^{1:N}) (parameters ∝ N; the
-    paper reports optimisation instability for Transformers, A.6).
+Compatibility shim over the strategy registry
+(``repro.core.strategies``): each demux family is a registered
+``DemuxStrategy`` object resolved by ``cfg.demux`` ("index_embed" — the
+paper's prefix-protocol shared MLP — or "mlp", N independent MLPs).  New
+schemes plug in via ``@register_demux``; new code should resolve strategies
+directly with ``get_demux``.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.configs.base import MuxConfig
-from repro.nn.layers import SharedMLPStack
+from repro.core.strategies import get_demux
 
 
 class Demultiplexer:
     @staticmethod
     def init(key, cfg: MuxConfig, d: int, *, param_dtype=jnp.float32):
-        n = cfg.n
-        hidden = cfg.demux_hidden or 2 * d
-        if cfg.demux == "index_embed":
-            k1, k2 = jax.random.split(key)
-            dims = [2 * d] + [hidden] * (cfg.demux_layers - 1) + [d]
-            return {
-                # ε^1..ε^N index tokens + ε^pad  (paper Sec 3.2)
-                "prefix_table": 0.02 * jax.random.normal(
-                    k1, (n + 1, d), jnp.float32).astype(param_dtype),
-                "mlp": SharedMLPStack.init(k2, dims, param_dtype=param_dtype),
-            }
-        if cfg.demux == "mlp":
-            keys = jax.random.split(key, n)
-            dims = [d] + [hidden] * (cfg.demux_layers - 1) + [d]
-
-            def one(k):
-                return SharedMLPStack.init(k, dims, param_dtype=param_dtype)
-
-            return {"mlps": jax.vmap(one)(keys)}  # leaves stacked over N
-        raise ValueError(f"unknown demux strategy {cfg.demux!r}")
-
-    # -- prefix protocol -------------------------------------------------------
+        return get_demux(cfg.demux).init(key, cfg, d, param_dtype=param_dtype)
 
     @staticmethod
     def prefix_embeddings(params, cfg: MuxConfig, dtype):
-        """(N, P, d) prefix embeddings: prefix^i = [pad..pad, ε^i, pad..pad]
-        with ε^i at position i (paper Sec 3.2).  P = cfg.prefix_len ≥ N;
-        positions ≥ N are all ε^pad (mesh-divisibility padding)."""
-        n, p = cfg.n, cfg.prefix_len
-        table = params["prefix_table"].astype(dtype)
-        eps = table[:n]            # (N, d) index tokens
-        pad = table[n]             # (d,) pad token
-        base = jnp.broadcast_to(pad, (n, p, eps.shape[-1]))
-        idx = jnp.arange(n)
-        return base.at[idx, idx].set(eps)  # (N, P, d)
-
-    # -- demux -----------------------------------------------------------------
+        """(N, P, d) prefix embeddings (prefix-protocol demuxers only)."""
+        return get_demux(cfg.demux).prefix_embeddings(params, cfg, dtype)
 
     @staticmethod
     def apply(params, h, cfg: MuxConfig, *, index_embeds=None,
               use_kernel: bool | None = None):
-        """h: (B, L, d) mixed output (prefix already stripped).
-
-        index_embed: ``index_embeds`` (B, N, d) are the backbone outputs at
-        the prefix positions.  Returns (B, N, L, d).
-        """
-        use_kernel = cfg.use_kernel if use_kernel is None else use_kernel
-        if cfg.demux == "index_embed":
-            assert index_embeds is not None
-            if use_kernel:
-                from repro.kernels.demux import ops as demux_ops
-                return demux_ops.index_embed_demux(params["mlp"], h,
-                                                   index_embeds)
-            b, l, d = h.shape
-            n = index_embeds.shape[1]
-            hb = jnp.broadcast_to(h[:, None], (b, n, l, d))
-            pb = jnp.broadcast_to(index_embeds[:, :, None], (b, n, l, d))
-            cat = jnp.concatenate([hb, pb], axis=-1)
-            return SharedMLPStack.apply(params["mlp"], cat, activation="gelu")
-        if cfg.demux == "mlp":
-            def one(mlp_params):
-                return SharedMLPStack.apply(mlp_params, h, activation="gelu")
-            out = jax.vmap(one)(params["mlps"])  # (N, B, L, d)
-            return out.transpose(1, 0, 2, 3)
-        raise ValueError(cfg.demux)
+        """h: (B, L, d) mixed output (prefix already stripped) ->
+        (B, N, L, d)."""
+        return get_demux(cfg.demux).apply(params, h, cfg,
+                                          index_embeds=index_embeds,
+                                          use_kernel=use_kernel)

@@ -1,89 +1,32 @@
 """Multiplexer Φ (paper Sec 3.1):  x^{1:N} = (1/N) Σ_i φ^i(x^i).
 
-φ^i strategies (paper Sec 3.1, A.5, A.10):
-  * "hadamard" — elementwise product with a fixed Gaussian vector v^i
-                 (a diagonal linear map; the paper's main configuration)
-  * "ortho"    — fixed random orthogonal matrix O^i
-  * "lowrank"  — N low-rank independent-subspace maps: d orthonormal rows are
-                 split into N groups U_i (d/N, d); φ^i = Q U_iᵀ U_i with Q a
-                 second orthogonal matrix (paper A.10)
-  * "binary"   — binary mask selecting the i-th d/N chunk (paper A.5)
-  * "identity" — φ^i = id (order-unidentifiable baseline, paper Sec 5)
-
-All transforms are *fixed* (stop_gradient) unless ``learned=True``
-(paper A.5 "Learned" ablation).  Applied token-wise for sequences.
+Compatibility shim over the strategy registry
+(``repro.core.strategies``): each φ^i family is a registered
+``MuxStrategy`` object resolved by ``cfg.strategy``, so new schemes plug in
+via ``@register_mux`` without touching this module.  Kept for the original
+static-method call sites (tests, examples); new code should resolve
+strategies directly with ``get_mux``.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.configs.base import MuxConfig
-from repro.nn import initializers
+from repro.core.strategies import get_mux
 
 
 class Multiplexer:
     @staticmethod
     def init(key, cfg: MuxConfig, d: int, *, param_dtype=jnp.float32):
-        n = cfg.n
-        if cfg.strategy == "hadamard":
-            v = jax.random.normal(key, (n, d), jnp.float32)
-            return {"v": v.astype(param_dtype)}
-        if cfg.strategy == "ortho":
-            keys = jax.random.split(key, n)
-            mats = jnp.stack([initializers.random_orthogonal(k, d)
-                              for k in keys])
-            return {"o": mats.astype(param_dtype)}
-        if cfg.strategy == "lowrank":
-            k1, k2 = jax.random.split(key)
-            u = initializers.random_orthogonal(k1, d)
-            q = initializers.random_orthogonal(k2, d)
-            return {"u": u.astype(param_dtype), "q": q.astype(param_dtype)}
-        if cfg.strategy == "binary":
-            r = d // n
-            mask = jnp.zeros((n, d), jnp.float32)
-            for i in range(n):
-                mask = mask.at[i, i * r:(i + 1) * r].set(1.0)
-            return {"mask": mask.astype(param_dtype)}
-        if cfg.strategy == "identity":
-            return {}
-        raise ValueError(f"unknown mux strategy {cfg.strategy!r}")
-
-    @staticmethod
-    def _maybe_freeze(p, cfg: MuxConfig):
-        return p if cfg.learned else jax.lax.stop_gradient(p)
+        return get_mux(cfg.strategy).init(key, cfg, d, param_dtype=param_dtype)
 
     @staticmethod
     def transform(params, x, cfg: MuxConfig):
         """Apply φ^i per index WITHOUT averaging.  x: (B, N, L, d) -> same."""
-        if cfg.strategy == "identity":
-            return x
-        if cfg.strategy == "hadamard":
-            v = Multiplexer._maybe_freeze(params["v"].astype(x.dtype), cfg)
-            return x * v[None, :, None, :]
-        if cfg.strategy == "ortho":
-            o = Multiplexer._maybe_freeze(params["o"].astype(x.dtype), cfg)
-            return jnp.einsum("bnld,nde->bnle", x, o)
-        if cfg.strategy == "lowrank":
-            u = Multiplexer._maybe_freeze(params["u"].astype(x.dtype), cfg)
-            q = Multiplexer._maybe_freeze(params["q"].astype(x.dtype), cfg)
-            n = cfg.n
-            r = u.shape[0] // n
-            ui = u[: n * r].reshape(n, r, -1)            # (N, r, d)
-            proj = jnp.einsum("bnld,nrd->bnlr", x, ui)    # subspace coords
-            back = jnp.einsum("bnlr,nrd->bnld", proj, ui)  # U_iᵀ U_i x
-            return jnp.einsum("bnld,de->bnle", back, q)
-        if cfg.strategy == "binary":
-            m = Multiplexer._maybe_freeze(params["mask"].astype(x.dtype), cfg)
-            return x * m[None, :, None, :]
-        raise ValueError(cfg.strategy)
+        return get_mux(cfg.strategy).transform(params, x, cfg)
 
     @staticmethod
     def apply(params, x, cfg: MuxConfig, *, use_kernel: bool | None = None):
         """x: (B, N, L, d) -> mixed (B, L, d).  Paper Eq. (1)."""
-        use_kernel = cfg.use_kernel if use_kernel is None else use_kernel
-        if use_kernel and cfg.strategy == "hadamard":
-            from repro.kernels.multiplex import ops as mux_ops
-            v = Multiplexer._maybe_freeze(params["v"].astype(x.dtype), cfg)
-            return mux_ops.hadamard_mux(x, v)
-        return jnp.mean(Multiplexer.transform(params, x, cfg), axis=1)
+        return get_mux(cfg.strategy).apply(params, x, cfg,
+                                           use_kernel=use_kernel)

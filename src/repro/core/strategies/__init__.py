@@ -1,0 +1,58 @@
+"""Pluggable mux/demux strategy registry — the extension point for new
+multiplexing schemes.
+
+The paper's core contribution is a *fixed per-index transform* φ^i plus a
+*learned demux*; everything else (backbone, trainer, serving engine,
+kernels) is agnostic to which φ family is in play.  This package makes that
+explicit: a ``MuxStrategy`` / ``DemuxStrategy`` protocol (``base``), a
+name-keyed decorator registry (``registry``), and the built-in strategies:
+
+  mux:   hadamard · ortho · lowrank · binary · identity   (paper Sec 3.1/A.5)
+         nonlinear                                        (paper A.11, conv)
+         rotation                                         (MIMONets-style
+                                                           circular shift)
+  demux: index_embed · mlp                                (paper Sec 3.2)
+
+Adding a strategy takes ~30 lines and zero edits to dispatch code::
+
+    from repro.core.strategies import MuxStrategy, register_mux
+
+    @register_mux("sign_flip")
+    class SignFlipMux(MuxStrategy):
+        '''φ^i = diag(s^i) with fixed random ±1 signs — a cheap isometry.'''
+
+        def init(self, key, cfg, d, *, param_dtype=jnp.float32):
+            s = jax.random.rademacher(key, (cfg.n, d), jnp.float32)
+            return {"s": s.astype(param_dtype)}
+
+        def transform(self, params, x, cfg):
+            s = self._maybe_freeze(params["s"].astype(x.dtype), cfg)
+            return x * s[None, :, None, :]
+
+``MuxConfig(strategy="sign_flip")`` then works end-to-end: ``Backbone``,
+``Trainer``, ``Engine`` and the benchmark sweeps all resolve strategies
+through this registry.  Pallas-fused paths hook in per strategy via
+``kernel_apply`` + ``uses_kernel`` (see ``linear.HadamardMux``); demuxers
+that need the prefix protocol set ``uses_prefix`` (see
+``demux.IndexEmbedDemux``).
+"""
+from repro.core.strategies.base import DemuxStrategy, MuxStrategy
+from repro.core.strategies.registry import (get_demux, get_mux,
+                                            list_demux_strategies,
+                                            list_mux_strategies,
+                                            register_demux, register_mux,
+                                            unregister_demux, unregister_mux)
+
+# Importing the builtin modules registers them.
+from repro.core.strategies import demux as _demux_builtins  # noqa: F401
+from repro.core.strategies import linear as _linear_builtins  # noqa: F401
+from repro.core.strategies import nonlinear as _nonlinear_builtins  # noqa: F401
+from repro.core.strategies import rotation as _rotation_builtins  # noqa: F401
+
+__all__ = [
+    "MuxStrategy", "DemuxStrategy",
+    "register_mux", "register_demux",
+    "get_mux", "get_demux",
+    "list_mux_strategies", "list_demux_strategies",
+    "unregister_mux", "unregister_demux",
+]

@@ -1,0 +1,125 @@
+"""Strategy protocol for the DataMUX mux/demux layer.
+
+A multiplexing scheme is a pair of objects resolved by name from the
+registry (``repro.core.strategies.registry``):
+
+  * ``MuxStrategy`` — the paper's fixed per-index transform φ^i plus the
+    position-wise average (Eq. 1).  Implementations override:
+
+      - ``init(key, cfg, d)``        -> params pytree ({} if parameter-free)
+      - ``transform(params, x, cfg)``-> per-index φ^i(x^i), no averaging;
+                                        x: (B, N, L, d) -> (B, N, L, d)
+      - ``combine(params, x, cfg)``  -> mixed stream (B, L, d); the default
+                                        is ``mean(transform(x), axis=1)``
+                                        and most strategies keep it
+      - ``kernel_apply(params, x, cfg)`` -> optional Pallas-fused combine;
+                                        set ``uses_kernel = True`` to route
+                                        ``cfg.use_kernel`` through it
+      - ``validate(cfg, d)``         -> raise ValueError at construction
+                                        time for (cfg, width) mismatches
+
+  * ``DemuxStrategy`` — recovers N per-instance states from the backbone's
+    mixed output (paper Sec 3.2).  Implementations override ``init`` and
+    ``separate``; prefix-protocol demuxers (index_embed) additionally set
+    ``uses_prefix = True`` and implement ``prefix_embeddings``.
+
+Transforms are *fixed* (stop_gradient) unless ``cfg.learned`` — use
+``_maybe_freeze`` on every param read; strategies that are inherently
+learned (e.g. ``nonlinear``) simply never freeze.
+
+Configs are duck-typed: any object with ``n`` (and the fields a concrete
+strategy reads, e.g. ``learned`` / ``conv_maps``) works, which is how
+``MuxConfig`` (text/backbone) and ``ImageMuxConfig`` (image models) share
+one registry.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+class MuxStrategy:
+    """Base class: φ^i per-index transform + mean combine (paper Sec 3.1)."""
+
+    name: str = ""           # set by @register_mux
+    uses_kernel: bool = False  # True -> kernel_apply implements the fused path
+
+    # -- construction ---------------------------------------------------------
+
+    def init(self, key, cfg, d: int, *, param_dtype=jnp.float32) -> dict:
+        """Build the (fixed or learned) transform params for width ``d``."""
+        del key, cfg, d, param_dtype
+        return {}
+
+    def validate(self, cfg, d: int) -> None:
+        """Raise ValueError if the strategy cannot run at width ``d``."""
+        del cfg, d
+
+    # -- forward --------------------------------------------------------------
+
+    def transform(self, params, x, cfg):
+        """Apply φ^i per index WITHOUT averaging: (B, N, L, d) -> same."""
+        raise NotImplementedError(type(self).__name__)
+
+    def combine(self, params, x, cfg):
+        """Mixed stream (B, L, d) = (1/N) Σ_i φ^i(x^i).  Paper Eq. (1)."""
+        return jnp.mean(self.transform(params, x, cfg), axis=1)
+
+    def kernel_apply(self, params, x, cfg):
+        """Pallas-fused combine.  Only valid when ``uses_kernel``."""
+        raise NotImplementedError(
+            f"mux strategy {self.name!r} has no fused kernel path")
+
+    def apply(self, params, x, cfg, *, use_kernel: bool | None = None):
+        """combine(), routed through kernel_apply() when requested+available."""
+        if use_kernel is None:
+            use_kernel = getattr(cfg, "use_kernel", False)
+        if use_kernel and self.uses_kernel:
+            return self.kernel_apply(params, x, cfg)
+        return self.combine(params, x, cfg)
+
+    # -- helpers --------------------------------------------------------------
+
+    @staticmethod
+    def _maybe_freeze(p, cfg):
+        """stop_gradient unless the config unfreezes φ (paper A.5 'Learned')."""
+        return p if getattr(cfg, "learned", False) else jax.lax.stop_gradient(p)
+
+
+class DemuxStrategy:
+    """Base class: recover (B, N, L, d) instance states from (B, L, d)."""
+
+    name: str = ""            # set by @register_demux
+    uses_kernel: bool = False
+    uses_prefix: bool = False  # True -> prefix protocol + index_embeds input
+
+    # -- construction ---------------------------------------------------------
+
+    def init(self, key, cfg, d: int, *, param_dtype=jnp.float32) -> dict:
+        raise NotImplementedError(type(self).__name__)
+
+    # -- prefix protocol (only for uses_prefix strategies) ---------------------
+
+    def prefix_embeddings(self, params, cfg, dtype):
+        """(N, P, d) prefix rows prepended to each instance (paper Sec 3.2)."""
+        raise NotImplementedError(
+            f"demux strategy {self.name!r} has no prefix protocol")
+
+    # -- forward --------------------------------------------------------------
+
+    def separate(self, params, h, cfg, *, index_embeds=None):
+        """h: (B, L, d) mixed output -> (B, N, L, d) per-instance states."""
+        raise NotImplementedError(type(self).__name__)
+
+    def kernel_apply(self, params, h, cfg, *, index_embeds=None):
+        raise NotImplementedError(
+            f"demux strategy {self.name!r} has no fused kernel path")
+
+    def apply(self, params, h, cfg, *, index_embeds=None,
+              use_kernel: bool | None = None):
+        if use_kernel is None:
+            use_kernel = getattr(cfg, "use_kernel", False)
+        if use_kernel and self.uses_kernel:
+            return self.kernel_apply(params, h, cfg,
+                                     index_embeds=index_embeds)
+        return self.separate(params, h, cfg, index_embeds=index_embeds)

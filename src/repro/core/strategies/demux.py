@@ -1,0 +1,92 @@
+"""Demultiplexing strategies (paper Sec 3.2).
+
+  * "index_embed" — the paper's main method for Transformers.  Each instance
+    is prepended with prefix^i (index token ε^i at position i, ε^pad
+    elsewhere); the backbone's output at prefix position i is the index
+    embedding p^i, and a *shared* MLP on [h_j^{1:N} ; p^i] emits h_j^i.
+  * "mlp" — N independent MLPs, h^i = MLP^i(h^{1:N}) (parameters ∝ N; the
+    paper reports optimisation instability for Transformers, A.6).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.strategies.base import DemuxStrategy
+from repro.core.strategies.registry import register_demux
+from repro.nn.layers import SharedMLPStack
+
+
+def _hidden(cfg, d: int) -> int:
+    return getattr(cfg, "demux_hidden", 0) or 2 * d
+
+
+def _layers(cfg) -> int:
+    return getattr(cfg, "demux_layers", 2)
+
+
+@register_demux("index_embed")
+class IndexEmbedDemux(DemuxStrategy):
+    """Shared MLP on [mixed state ; index embedding] via the prefix protocol."""
+
+    uses_kernel = True
+    uses_prefix = True
+
+    def init(self, key, cfg, d, *, param_dtype=jnp.float32):
+        k1, k2 = jax.random.split(key)
+        dims = [2 * d] + [_hidden(cfg, d)] * (_layers(cfg) - 1) + [d]
+        return {
+            # ε^1..ε^N index tokens + ε^pad  (paper Sec 3.2)
+            "prefix_table": 0.02 * jax.random.normal(
+                k1, (cfg.n + 1, d), jnp.float32).astype(param_dtype),
+            "mlp": SharedMLPStack.init(k2, dims, param_dtype=param_dtype),
+        }
+
+    def prefix_embeddings(self, params, cfg, dtype):
+        """(N, P, d) prefix embeddings: prefix^i = [pad..pad, ε^i, pad..pad]
+        with ε^i at position i (paper Sec 3.2).  P = cfg.prefix_len ≥ N;
+        positions ≥ N are all ε^pad (mesh-divisibility padding)."""
+        n, p = cfg.n, cfg.prefix_len
+        table = params["prefix_table"].astype(dtype)
+        eps = table[:n]            # (N, d) index tokens
+        pad = table[n]             # (d,) pad token
+        base = jnp.broadcast_to(pad, (n, p, eps.shape[-1]))
+        idx = jnp.arange(n)
+        return base.at[idx, idx].set(eps)  # (N, P, d)
+
+    def separate(self, params, h, cfg, *, index_embeds=None):
+        assert index_embeds is not None, "index_embed demux needs index_embeds"
+        b, l, d = h.shape
+        n = index_embeds.shape[1]
+        hb = jnp.broadcast_to(h[:, None], (b, n, l, d))
+        pb = jnp.broadcast_to(index_embeds[:, :, None], (b, n, l, d))
+        cat = jnp.concatenate([hb, pb], axis=-1)
+        return SharedMLPStack.apply(params["mlp"], cat, activation="gelu")
+
+    def kernel_apply(self, params, h, cfg, *, index_embeds=None):
+        assert index_embeds is not None, "index_embed demux needs index_embeds"
+        from repro.kernels.demux import ops as demux_ops
+        return demux_ops.index_embed_demux(params["mlp"], h, index_embeds)
+
+
+@register_demux("mlp")
+class MLPDemux(DemuxStrategy):
+    """N independent MLPs on the mixed state — params ∝ N (paper Sec 3.2)."""
+
+    def init(self, key, cfg, d, *, param_dtype=jnp.float32):
+        keys = jax.random.split(key, cfg.n)
+        dims = [d] + [_hidden(cfg, d)] * (_layers(cfg) - 1) + [d]
+
+        def one(k):
+            return SharedMLPStack.init(k, dims, param_dtype=param_dtype)
+
+        return {"mlps": jax.vmap(one)(keys)}  # leaves stacked over N
+
+    def separate(self, params, h, cfg, *, index_embeds=None):
+        del index_embeds
+
+        def one(mlp_params):
+            return SharedMLPStack.apply(mlp_params, h, activation="gelu")
+
+        out = jax.vmap(one)(params["mlps"])  # (N, B, L, d)
+        return out.transpose(1, 0, 2, 3)

@@ -1,0 +1,119 @@
+"""The paper's linear φ^i strategies (Sec 3.1, A.5, A.10).
+
+  * "hadamard" — elementwise product with a fixed Gaussian vector v^i
+                 (a diagonal linear map; the paper's main configuration)
+  * "ortho"    — fixed random orthogonal matrix O^i
+  * "lowrank"  — N low-rank independent-subspace maps: d orthonormal rows are
+                 split into N groups U_i (d/N, d); φ^i = Q U_iᵀ U_i with Q a
+                 second orthogonal matrix (paper A.10)
+  * "binary"   — binary mask selecting the i-th d/N chunk (paper A.5)
+  * "identity" — φ^i = id (order-unidentifiable baseline, paper Sec 5)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.strategies.base import MuxStrategy
+from repro.core.strategies.registry import register_mux
+from repro.nn import initializers
+
+
+@register_mux("identity")
+class IdentityMux(MuxStrategy):
+    """φ^i = id: plain averaging, cannot recover instance order."""
+
+    def transform(self, params, x, cfg):
+        return x
+
+
+@register_mux("hadamard")
+class HadamardMux(MuxStrategy):
+    """Fixed Gaussian vectors v^i, φ^i(x) = v^i ⊙ x (paper's main config)."""
+
+    uses_kernel = True
+
+    def init(self, key, cfg, d, *, param_dtype=jnp.float32):
+        v = jax.random.normal(key, (cfg.n, d), jnp.float32)
+        return {"v": v.astype(param_dtype)}
+
+    def transform(self, params, x, cfg):
+        v = self._maybe_freeze(params["v"].astype(x.dtype), cfg)
+        return x * v[None, :, None, :]
+
+    def kernel_apply(self, params, x, cfg):
+        from repro.kernels.multiplex import ops as mux_ops
+        v = self._maybe_freeze(params["v"].astype(x.dtype), cfg)
+        return mux_ops.hadamard_mux(x, v)
+
+
+@register_mux("ortho")
+class OrthoMux(MuxStrategy):
+    """Fixed random orthogonal matrices O^i — isometric per-index binding."""
+
+    def init(self, key, cfg, d, *, param_dtype=jnp.float32):
+        keys = jax.random.split(key, cfg.n)
+        mats = jnp.stack([initializers.random_orthogonal(k, d) for k in keys])
+        return {"o": mats.astype(param_dtype)}
+
+    def transform(self, params, x, cfg):
+        o = self._maybe_freeze(params["o"].astype(x.dtype), cfg)
+        return jnp.einsum("bnld,nde->bnle", x, o)
+
+
+@register_mux("lowrank")
+class LowRankMux(MuxStrategy):
+    """Independent-subspace maps φ^i = Q U_iᵀ U_i (paper A.10).
+
+    When d % n != 0 the trailing d - n·⌊d/n⌋ orthonormal rows are dropped
+    (the paper's construction); d < n would leave every subspace empty and
+    is rejected at construction time.
+    """
+
+    def validate(self, cfg, d):
+        if d // cfg.n == 0:
+            raise ValueError(
+                f"lowrank mux needs d >= n so each instance gets a non-empty "
+                f"subspace; got d={d}, n={cfg.n}")
+
+    def init(self, key, cfg, d, *, param_dtype=jnp.float32):
+        self.validate(cfg, d)
+        k1, k2 = jax.random.split(key)
+        u = initializers.random_orthogonal(k1, d)
+        q = initializers.random_orthogonal(k2, d)
+        return {"u": u.astype(param_dtype), "q": q.astype(param_dtype)}
+
+    def transform(self, params, x, cfg):
+        u = self._maybe_freeze(params["u"].astype(x.dtype), cfg)
+        q = self._maybe_freeze(params["q"].astype(x.dtype), cfg)
+        n = cfg.n
+        r = u.shape[0] // n
+        ui = u[: n * r].reshape(n, r, -1)              # (N, r, d)
+        proj = jnp.einsum("bnld,nrd->bnlr", x, ui)     # subspace coords
+        back = jnp.einsum("bnlr,nrd->bnld", proj, ui)  # U_iᵀ U_i x
+        return jnp.einsum("bnld,de->bnle", back, q)
+
+
+@register_mux("binary")
+class BinaryMux(MuxStrategy):
+    """Binary mask keeping the i-th d/N chunk — lossless concat (paper A.5)."""
+
+    def validate(self, cfg, d):
+        if d % cfg.n:
+            raise ValueError(
+                f"binary mux needs d % n == 0 so the chunks partition the "
+                f"width; got d={d}, n={cfg.n}")
+
+    def init(self, key, cfg, d, *, param_dtype=jnp.float32):
+        del key
+        self.validate(cfg, d)
+        n = cfg.n
+        r = d // n
+        mask = jnp.zeros((n, d), jnp.float32)
+        for i in range(n):
+            mask = mask.at[i, i * r:(i + 1) * r].set(1.0)
+        return {"mask": mask.astype(param_dtype)}
+
+    def transform(self, params, x, cfg):
+        m = self._maybe_freeze(params["mask"].astype(x.dtype), cfg)
+        return x * m[None, :, None, :]

@@ -1,0 +1,70 @@
+"""Nonlinear conv multiplexer (paper A.11 — the CNN's best strategy).
+
+φ^i is a small two-layer 3x3 conv net with tanh; the mixture is the mean of
+the per-index activation maps.  The paper trains the mux nets jointly, so
+``cfg.learned`` *defaults to True* here when the config has no ``learned``
+field (the image configs); text ``MuxConfig``s carry the flag explicitly
+and it is honored like everywhere else — ``learned=False`` freezes the
+conv weights (a fixed random nonlinear binding).
+
+The strategy is spatial: each d-vector is viewed as a √d × √d map, which
+covers both the image models (d = size², one "token") and any text config
+whose d_model is a perfect square.  ``cfg.conv_maps`` (default 16) sets the
+hidden channel count.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.strategies.base import MuxStrategy
+from repro.core.strategies.registry import register_mux
+
+
+def _conv(img, w):
+    return jax.lax.conv_general_dilated(
+        img, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _side(d: int) -> int:
+    s = math.isqrt(d)
+    if s * s != d:
+        raise ValueError(
+            f"nonlinear mux views features as a square map; d={d} is not a "
+            f"perfect square")
+    return s
+
+
+@register_mux("nonlinear")
+class NonlinearConvMux(MuxStrategy):
+
+    def validate(self, cfg, d):
+        _side(d)
+
+    def init(self, key, cfg, d, *, param_dtype=jnp.float32):
+        self.validate(cfg, d)
+        n = cfg.n
+        c = getattr(cfg, "conv_maps", 16)
+        keys = jax.random.split(key, 2 * n)
+        w1 = jnp.stack([0.3 * jax.random.normal(keys[2 * i], (3, 3, 1, c))
+                        for i in range(n)])
+        w2 = jnp.stack([0.3 * jax.random.normal(keys[2 * i + 1], (3, 3, c, 1))
+                        for i in range(n)])
+        return {"w1": w1.astype(param_dtype), "w2": w2.astype(param_dtype)}
+
+    def transform(self, params, x, cfg):
+        b, n, l, d = x.shape
+        s = _side(d)
+        w1 = params["w1"].astype(x.dtype)
+        w2 = params["w2"].astype(x.dtype)
+        if not getattr(cfg, "learned", True):  # image configs: always learned
+            w1, w2 = jax.lax.stop_gradient((w1, w2))
+        outs = []
+        for i in range(n):  # mux nets, learned by default (paper A.11)
+            img = x[:, i].reshape(b * l, s, s, 1)
+            z = jnp.tanh(_conv(img, w1[i]))
+            z = jnp.tanh(_conv(z, w2[i]))
+            outs.append(z.reshape(b, l, d))
+        return jnp.stack(outs, axis=1)

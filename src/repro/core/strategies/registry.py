@@ -1,0 +1,84 @@
+"""Decorator registry for multiplexing / demultiplexing strategies.
+
+Strategies register under a string name and are resolved by the same name
+used in ``MuxConfig.strategy`` / ``MuxConfig.demux``:
+
+    @register_mux("hadamard")
+    class HadamardMux(MuxStrategy): ...
+
+    get_mux("hadamard").combine(params, x, cfg)
+
+Registration stores a singleton instance (strategies are stateless; all
+state lives in the params pytree).  ``unregister_*`` exists for test
+hygiene and plugin reload scenarios.
+"""
+from __future__ import annotations
+
+from typing import Callable, TypeVar
+
+T = TypeVar("T", bound=type)
+
+_MUX: dict[str, object] = {}
+_DEMUX: dict[str, object] = {}
+
+
+def register_mux(name: str) -> Callable[[T], T]:
+    """Class decorator: register a MuxStrategy subclass under ``name``."""
+    def deco(cls: T) -> T:
+        if name in _MUX:
+            raise ValueError(
+                f"mux strategy {name!r} already registered "
+                f"({type(_MUX[name]).__name__}); unregister_mux first to "
+                f"replace it")
+        cls.name = name
+        _MUX[name] = cls()
+        return cls
+    return deco
+
+
+def register_demux(name: str) -> Callable[[T], T]:
+    """Class decorator: register a DemuxStrategy subclass under ``name``."""
+    def deco(cls: T) -> T:
+        if name in _DEMUX:
+            raise ValueError(
+                f"demux strategy {name!r} already registered "
+                f"({type(_DEMUX[name]).__name__}); unregister_demux first to "
+                f"replace it")
+        cls.name = name
+        _DEMUX[name] = cls()
+        return cls
+    return deco
+
+
+def get_mux(name: str):
+    try:
+        return _MUX[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown mux strategy {name!r}; registered: "
+            f"{list_mux_strategies()}") from None
+
+
+def get_demux(name: str):
+    try:
+        return _DEMUX[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown demux strategy {name!r}; registered: "
+            f"{list_demux_strategies()}") from None
+
+
+def list_mux_strategies() -> list[str]:
+    return sorted(_MUX)
+
+
+def list_demux_strategies() -> list[str]:
+    return sorted(_DEMUX)
+
+
+def unregister_mux(name: str) -> None:
+    _MUX.pop(name, None)
+
+
+def unregister_demux(name: str) -> None:
+    _DEMUX.pop(name, None)

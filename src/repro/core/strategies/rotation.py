@@ -1,0 +1,42 @@
+"""Rotation binding: parameter-free circular-shift φ^i (registry-only).
+
+MIMONets-style superposition coding binds each instance with an isometry
+drawn from a structured family instead of a dense random matrix.  Here
+φ^i = S^{r_i}, the cyclic permutation rolling the feature axis by
+r_i = ⌊i·d/N⌋ — maximally spread shifts so any two instances differ by at
+least ⌊d/N⌋ positions.
+
+Properties: exact isometry (a permutation), parameter-free (nothing stored,
+nothing to freeze), order-identifiable for N ≥ 2, and φ^0 = id so N = 1
+degrades to identity semantics.  This strategy exists purely through the
+registry — no core dispatch code knows about it — and doubles as the
+reference for "add your own strategy" (README §strategies).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.strategies.base import MuxStrategy
+from repro.core.strategies.registry import register_mux
+
+
+@register_mux("rotation")
+class RotationMux(MuxStrategy):
+
+    def validate(self, cfg, d):
+        if cfg.n > 1 and d < cfg.n:
+            raise ValueError(
+                f"rotation mux needs d >= n for distinct shifts; "
+                f"got d={d}, n={cfg.n}")
+
+    def init(self, key, cfg, d, *, param_dtype=jnp.float32):
+        del key, param_dtype  # parameter-free; init only enforces the width
+        self.validate(cfg, d)
+        return {}
+
+    def transform(self, params, x, cfg):
+        del params  # parameter-free
+        n = cfg.n
+        d = x.shape[-1]
+        rolled = [jnp.roll(x[:, i], (i * d) // n, axis=-1) for i in range(n)]
+        return jnp.stack(rolled, axis=1)

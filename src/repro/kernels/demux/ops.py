@@ -1,7 +1,9 @@
 """Public op: fused index-embed demux (interpret=True on CPU).
 
-Falls back to the jnp reference when the shared MLP is not the fused-kernel
-2-layer shape (``demux_layers != 2``).
+Reached through the strategy registry: ``IndexEmbedDemux.kernel_apply``
+(``repro.core.strategies.demux``) routes here when ``cfg.use_kernel`` is
+set.  Falls back to the jnp reference when the shared MLP is not the
+fused-kernel 2-layer shape (``demux_layers != 2``).
 """
 from __future__ import annotations
 

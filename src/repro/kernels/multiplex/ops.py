@@ -1,4 +1,11 @@
-"""Public op: fused Hadamard multiplexer (interpret=True on CPU)."""
+"""Public op: fused Hadamard multiplexer (interpret=True on CPU).
+
+Reached through the strategy registry: ``HadamardMux.kernel_apply``
+(``repro.core.strategies.linear``) routes here when ``cfg.use_kernel`` is
+set.  A new strategy gets a fused path by implementing its own
+``kernel_apply`` + ``uses_kernel = True`` — this module stays
+strategy-agnostic.
+"""
 from __future__ import annotations
 
 import jax

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.strategies import get_demux
 from repro.models import Backbone
 
 S = jax.ShapeDtypeStruct
@@ -72,7 +73,7 @@ def decode_inputs(cfg: ModelConfig, shape: ShapeConfig,
         "cache": cache,
         "pos": S((), jnp.int32),
     }
-    if cfg.mux.active and cfg.mux.demux == "index_embed":
+    if cfg.mux.active and get_demux(cfg.mux.demux).uses_prefix:
         out["index_embeds"] = S((b, n, cfg.d_model), cfg.compute_dtype)
     ctx = context_struct(cfg, shape)
     if ctx is not None:

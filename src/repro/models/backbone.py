@@ -10,8 +10,10 @@ ModelConfig:
     repeats of a ``period``-layer super-block run under ``jax.lax.scan``
     (stacked params ⇒ HLO size independent of depth), then an unscanned tail.
   * DataMUX (the paper's technique) is integrated natively: token embedding →
-    prefix protocol → Multiplexer → blocks → Demultiplexer → per-instance
-    logits.  ``cfg.mux.n == 1`` degrades to a vanilla LM.
+    prefix protocol → mux strategy → blocks → demux strategy → per-instance
+    logits.  Mux/demux schemes are resolved by name from the strategy
+    registry (``repro.core.strategies``), so new codecs plug in without
+    touching this file.  ``cfg.mux.n == 1`` degrades to a vanilla LM.
   * Decode mode threads per-layer caches (KV / ring-buffer / MLA-latent /
     SSM state) through the same scan.
 """
@@ -24,8 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, MuxConfig
-from repro.core.demultiplexer import Demultiplexer
-from repro.core.multiplexer import Multiplexer
+from repro.core.strategies import get_demux, get_mux
 from repro.nn.attention import MLA, Attention, CrossAttention
 from repro.nn.layers import Embedding, Linear, MLP, make_norm
 from repro.nn.moe import SINGLE, MeshInfo, MoE
@@ -163,10 +164,10 @@ class Backbone:
             params["lm_head"] = Linear.init(keys[2], cfg.d_model, cfg.vocab,
                                             param_dtype=pdtype)
         if cfg.mux.active:
-            params["mux"] = Multiplexer.init(keys[3], cfg.mux, cfg.d_model,
-                                             param_dtype=pdtype)
-            params["demux"] = Demultiplexer.init(keys[4], cfg.mux, cfg.d_model,
-                                                 param_dtype=pdtype)
+            params["mux"] = get_mux(cfg.mux.strategy).init(
+                keys[3], cfg.mux, cfg.d_model, param_dtype=pdtype)
+            params["demux"] = get_demux(cfg.mux.demux).init(
+                keys[4], cfg.mux, cfg.d_model, param_dtype=pdtype)
 
         lkeys = jax.random.split(keys[5], cfg.n_layers)
         params["head_layers"] = [
@@ -392,15 +393,17 @@ class Backbone:
             cross_kv = Backbone.encode_context(params, context, cfg,
                                                mesh=mesh, mesh_info=mesh_info)
         if mux.active:
+            demux_s = get_demux(mux.demux)
             b, n, l = tokens.shape
             emb = Backbone.embed(params, tokens, cfg)  # (B, N, L, d)
             p = mux.prefix_len
             if p:
-                pre = Demultiplexer.prefix_embeddings(
+                pre = demux_s.prefix_embeddings(
                     params["demux"], mux, emb.dtype)  # (N, P, d)
                 pre = jnp.broadcast_to(pre[None], (b, n, p, emb.shape[-1]))
                 emb = jnp.concatenate([pre, emb], axis=2)
-            x = Multiplexer.apply(params["mux"], emb, mux)  # (B, P+L, d)
+            x = get_mux(mux.strategy).apply(params["mux"], emb,
+                                            mux)  # (B, P+L, d)
         else:
             b, l = tokens.shape
             p = 0
@@ -416,7 +419,7 @@ class Backbone:
         out = {"hidden": h, "aux": aux, "index_embeds": None,
                "cache": new_cache}
         if mux.active:
-            if mux.demux == "index_embed":
+            if demux_s.uses_prefix:
                 index_embeds = h[:, :mux.n]       # p^i = h at prefix pos i
                 h_rest = h[:, p:]                 # drop padding positions too
             else:
@@ -424,8 +427,8 @@ class Backbone:
                 h_rest = h
             if last_only:
                 h_rest = h_rest[:, -1:]
-            demuxed = Demultiplexer.apply(params["demux"], h_rest, mux,
-                                          index_embeds=index_embeds)
+            demuxed = demux_s.apply(params["demux"], h_rest, mux,
+                                    index_embeds=index_embeds)
             out["demuxed"] = demuxed
             out["index_embeds"] = index_embeds
             out["logits"] = Backbone.logits(params, demuxed, cfg)
@@ -451,7 +454,8 @@ class Backbone:
         if mux.active:
             b, n = tokens.shape
             emb = Backbone.embed(params, tokens[:, :, None], cfg)  # (B,N,1,d)
-            x = Multiplexer.apply(params["mux"], emb, mux)         # (B,1,d)
+            x = get_mux(mux.strategy).apply(params["mux"], emb,
+                                            mux)                  # (B,1,d)
         else:
             b = tokens.shape[0]
             x = Backbone.embed(params, tokens[:, None], cfg)       # (B,1,d)
@@ -464,7 +468,7 @@ class Backbone:
             mesh_info=mesh_info)
 
         if mux.active:
-            demuxed = Demultiplexer.apply(
+            demuxed = get_demux(mux.demux).apply(
                 params["demux"], h, mux, index_embeds=index_embeds)
             logits = Backbone.logits(params, demuxed[:, :, 0], cfg)  # (B,N,V)
         else:

@@ -6,11 +6,13 @@ The paper's image models, in JAX:
   * CNN: LeNet-style (10@3x3 -> pool -> 16@4x4 -> pool -> 120@3x3) -> 84
     hidden; same demux + shared-readout structure.
 
-Multiplexing strategies (Fig 7a / Fig 11): "identity" (order-unidentifiable
-baseline), "ortho" SO(d), "lowrank" (A.10), and "nonlinear" — N small
-two-layer conv nets with tanh whose activation maps are summed (the CNN's
-best; A.11).  All operate on flattened pixels except "nonlinear", which is
-spatial.
+Multiplexing resolves through the same strategy registry as the text
+backbone (``repro.core.strategies``): the paper's image strategies are
+"identity" (order-unidentifiable baseline), "ortho" SO(d), "lowrank"
+(A.10) and "nonlinear" (A.11, N small two-layer conv nets with tanh —
+the CNN's best), but any registered strategy whose ``validate`` passes at
+d = size² works, e.g. "hadamard" or "rotation".  Images are flattened to
+one d-wide token; the "nonlinear" strategy re-views that token spatially.
 """
 from __future__ import annotations
 
@@ -19,7 +21,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.nn import initializers
+from repro.core.strategies import get_mux
 
 Params = dict
 
@@ -27,7 +29,7 @@ Params = dict
 @dataclasses.dataclass(frozen=True)
 class ImageMuxConfig:
     n: int = 1
-    strategy: str = "ortho"      # identity | ortho | lowrank | nonlinear
+    strategy: str = "ortho"      # any registered mux strategy
     size: int = 20               # image side (paper crops to 20x20)
     n_classes: int = 10
     hidden: int = 100            # MLP hidden width
@@ -38,63 +40,33 @@ class ImageMuxConfig:
     def d(self) -> int:
         return self.size * self.size
 
+    def __post_init__(self):
+        if self.n < 1:
+            raise ValueError(f"mux width n must be >= 1, got n={self.n}")
+        strat = get_mux(self.strategy)  # raises listing registered names
+        if self.n > 1:
+            strat.validate(self, self.d)
+
 
 # ---------------------------------------------------------------------------
-# multiplexing transforms on images
+# multiplexing transforms on images (registry-backed)
 # ---------------------------------------------------------------------------
 
 def init_image_mux(key, cfg: ImageMuxConfig):
-    n, d = cfg.n, cfg.d
-    if cfg.strategy == "identity" or n == 1:
+    if cfg.n == 1:
         return {}
-    if cfg.strategy == "ortho":
-        keys = jax.random.split(key, n)
-        return {"o": jnp.stack([initializers.random_orthogonal(k, d)
-                                for k in keys])}
-    if cfg.strategy == "lowrank":
-        k1, k2 = jax.random.split(key)
-        return {"u": initializers.random_orthogonal(k1, d),
-                "q": initializers.random_orthogonal(k2, d)}
-    if cfg.strategy == "nonlinear":
-        # N two-layer 3x3 conv nets, tanh, summed single activation map
-        keys = jax.random.split(key, 2 * n)
-        c = cfg.conv_maps
-        w1 = jnp.stack([0.3 * jax.random.normal(keys[2 * i], (3, 3, 1, c))
-                        for i in range(n)])
-        w2 = jnp.stack([0.3 * jax.random.normal(keys[2 * i + 1], (3, 3, c, 1))
-                        for i in range(n)])
-        return {"w1": w1, "w2": w2}
-    raise ValueError(cfg.strategy)
+    return get_mux(cfg.strategy).init(key, cfg, cfg.d)
 
 
 def apply_image_mux(params, x, cfg: ImageMuxConfig):
-    """x: (B, N, H, W) -> mixed (B, H*W) (or (B, H, W) for nonlinear)."""
-    b, n, hh, ww = x.shape
-    flat = x.reshape(b, n, -1)
-    if cfg.strategy == "identity" or n == 1:
-        return jnp.mean(flat, axis=1)
-    if cfg.strategy == "ortho":
-        o = jax.lax.stop_gradient(params["o"])
-        return jnp.mean(jnp.einsum("bnd,nde->bne", flat, o), axis=1)
-    if cfg.strategy == "lowrank":
-        u = jax.lax.stop_gradient(params["u"])
-        q = jax.lax.stop_gradient(params["q"])
-        r = u.shape[0] // n
-        ui = u[: n * r].reshape(n, r, -1)
-        proj = jnp.einsum("bnd,nrd->bnr", flat, ui)
-        back = jnp.einsum("bnr,nrd->bnd", proj, ui)
-        return jnp.mean(back @ q, axis=1)
-    if cfg.strategy == "nonlinear":
-        def conv(img, w):
-            return jax.lax.conv_general_dilated(
-                img, w, (1, 1), "SAME",
-                dimension_numbers=("NHWC", "HWIO", "NHWC"))
-        acc = 0.0
-        for i in range(n):  # learned mux nets (paper A.11 "Nonlinear")
-            z = jnp.tanh(conv(x[:, i, :, :, None], params["w1"][i]))
-            acc = acc + jnp.tanh(conv(z, params["w2"][i]))[..., 0]
-        return (acc / n).reshape(b, -1)
-    raise ValueError(cfg.strategy)
+    """x: (B, N, H, W) -> mixed (B, H*W).  Flattens to one d-wide token and
+    runs the registered strategy's combine (strategies that need spatial
+    structure, e.g. "nonlinear", recover it from d = side²)."""
+    b, n = x.shape[:2]
+    flat = x.reshape(b, n, 1, -1)        # (B, N, L=1, d)
+    if n == 1:
+        return flat[:, 0, 0]
+    return get_mux(cfg.strategy).combine(params, flat, cfg)[:, 0]
 
 
 # ---------------------------------------------------------------------------

@@ -7,6 +7,12 @@ matmul, demux applied per step to the final hidden state.
 
 Flow:  prefill(prompts (B, N, Lp)) -> ServeState{cache, index_embeds, pos}
        step(state, last_tokens (B, N)) -> (logits (B, N, V), state)
+
+The engine is strategy-agnostic: mux/demux schemes resolve by name from
+``repro.core.strategies`` inside the backbone, so any registered strategy
+(including fused ``kernel_apply`` paths via ``cfg.mux.use_kernel``) serves
+through this class unchanged.  ``index_embeds`` is populated only for
+prefix-protocol demuxers (``uses_prefix``) and stays None otherwise.
 """
 from __future__ import annotations
 
@@ -25,7 +31,8 @@ from repro.nn.moe import SINGLE, MeshInfo
 class ServeState:
     cache: Any
     pos: jnp.ndarray                     # scalar int32: next absolute position
-    index_embeds: Optional[jnp.ndarray]  # (B, N, d) for index-embed demux
+    index_embeds: Optional[jnp.ndarray]  # (B, N, d) for prefix-protocol demux
+                                         # strategies (uses_prefix), else None
     cross_kv: Any = None
 
 

@@ -7,7 +7,10 @@ import pytest
 from repro.data.images import SyntheticDigits
 from repro.models.image import (ImageMuxConfig, MuxCNN, MuxMLP, image_loss)
 
-STRATEGIES = ["identity", "ortho", "lowrank", "nonlinear"]
+# Paper image strategies plus registry extras (hadamard/rotation) — image
+# models resolve through the same strategy registry as the text backbone.
+STRATEGIES = ["identity", "ortho", "lowrank", "nonlinear", "hadamard",
+              "rotation"]
 
 
 @pytest.mark.parametrize("model", [MuxMLP, MuxCNN])

@@ -8,7 +8,8 @@ from hypothesis import given, settings, strategies as st
 from repro.configs.base import MuxConfig
 from repro.core.multiplexer import Multiplexer
 
-STRATEGIES = ["hadamard", "ortho", "lowrank", "binary", "identity"]
+STRATEGIES = ["hadamard", "ortho", "lowrank", "binary", "identity",
+              "rotation"]
 
 
 @pytest.mark.parametrize("strategy", STRATEGIES)
@@ -16,6 +17,11 @@ STRATEGIES = ["hadamard", "ortho", "lowrank", "binary", "identity"]
 def test_shapes_and_finite(key, strategy, n):
     d = 64
     cfg = MuxConfig(n=n, strategy=strategy)
+    if strategy == "binary" and d % n:
+        # construction-time validation: chunks must partition the width
+        with pytest.raises(ValueError, match="d % n"):
+            Multiplexer.init(key, cfg, d)
+        return
     params = Multiplexer.init(key, cfg, d)
     x = jax.random.normal(key, (3, n, 7, d))
     out = Multiplexer.apply(params, x, cfg)
@@ -38,7 +44,8 @@ def test_linearity(key, strategy):
     np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-4)
 
 
-@pytest.mark.parametrize("strategy", ["hadamard", "ortho", "lowrank", "binary"])
+@pytest.mark.parametrize("strategy", ["hadamard", "ortho", "lowrank", "binary",
+                                      "rotation"])
 def test_order_dependence(key, strategy):
     """Unlike the identity baseline, real strategies distinguish instance
     order — swapping two instances changes the mixture (Sec 3.1)."""

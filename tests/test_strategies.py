@@ -1,0 +1,257 @@
+"""Strategy registry API: round-trips, n=1 semantics, kernel parity,
+construction-time validation, and end-to-end extensibility."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, MuxConfig
+from repro.core.strategies import (MuxStrategy, get_demux, get_mux,
+                                   list_demux_strategies, list_mux_strategies,
+                                   register_mux, unregister_mux)
+from repro.models import Backbone
+
+ALL_MUX = list_mux_strategies()
+ALL_DEMUX = list_demux_strategies()
+
+
+def _tiny_model_cfg(**mux_kw):
+    return ModelConfig(name="tiny", family="dense", n_layers=2, d_model=32,
+                       n_heads=2, n_kv_heads=2, d_ff=64, vocab=64,
+                       dtype="float32", param_dtype="float32", remat="none",
+                       mux=MuxConfig(**mux_kw))
+
+
+# ---------------------------------------------------------------------------
+# registry contents + round-trips
+# ---------------------------------------------------------------------------
+
+def test_registry_contains_all_builtins():
+    """Five paper strategies + image nonlinear + rotation, via ONE registry."""
+    assert {"hadamard", "ortho", "lowrank", "binary", "identity",
+            "nonlinear", "rotation"} <= set(ALL_MUX)
+    assert {"index_embed", "mlp"} <= set(ALL_DEMUX)
+
+
+@pytest.mark.parametrize("demux", ALL_DEMUX)
+@pytest.mark.parametrize("strategy", ALL_MUX)
+def test_combine_separate_roundtrip_shapes(key, strategy, demux):
+    """Every registered mux x demux pair round-trips shape-correctly:
+    (B, N, L, d) -combine-> (B, L, d) -separate-> (B, N, L, d)."""
+    n, d, b, l = 4, 64, 2, 5   # d: multiple of n AND a perfect square
+    cfg = MuxConfig(n=n, strategy=strategy, demux=demux)
+    ms, ds = get_mux(strategy), get_demux(demux)
+    k1, k2, k3 = jax.random.split(key, 3)
+    mp = ms.init(k1, cfg, d)
+    dp = ds.init(k2, cfg, d)
+    x = jax.random.normal(k3, (b, n, l, d))
+    mixed = ms.apply(mp, x, cfg)
+    assert mixed.shape == (b, l, d)
+    assert jnp.isfinite(mixed).all()
+    ie = jax.random.normal(k3, (b, n, d)) if ds.uses_prefix else None
+    out = ds.apply(dp, mixed, cfg, index_embeds=ie)
+    assert out.shape == (b, n, l, d)
+    assert jnp.isfinite(out).all()
+
+
+@pytest.mark.parametrize("strategy", ALL_MUX)
+def test_transform_matches_combine(key, strategy):
+    """combine == mean(transform) for every builtin (the paper's Eq. 1)."""
+    n, d = 2, 16
+    cfg = MuxConfig(n=n, strategy=strategy)
+    s = get_mux(strategy)
+    p = s.init(key, cfg, d)
+    x = jax.random.normal(key, (1, n, 3, d))
+    np.testing.assert_allclose(s.combine(p, x, cfg),
+                               s.transform(p, x, cfg).mean(axis=1),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# n = 1 degradation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", ALL_MUX)
+def test_n1_is_inactive(strategy):
+    """n=1 configs are inactive — the backbone skips mux/demux entirely,
+    which is how every strategy degrades to identity semantics."""
+    assert not MuxConfig(n=1, strategy=strategy).active
+
+
+@pytest.mark.parametrize("strategy", ["identity", "binary", "rotation"])
+def test_n1_combine_is_identity(key, strategy):
+    """Strategies whose φ^1 = id also pass through numerically at n=1."""
+    cfg = MuxConfig(n=1, strategy=strategy)
+    s = get_mux(strategy)
+    p = s.init(key, cfg, 16)
+    x = jax.random.normal(key, (2, 1, 3, 16))
+    np.testing.assert_allclose(s.combine(p, x, cfg), x[:, 0],
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# kernel path parity
+# ---------------------------------------------------------------------------
+
+def test_hadamard_kernel_matches_reference(key):
+    """use_kernel=True routes through HadamardMux.kernel_apply (Pallas,
+    interpret mode on CPU) and must match the jnp combine."""
+    n, d = 3, 64
+    cfg = MuxConfig(n=n, strategy="hadamard", use_kernel=True)
+    s = get_mux("hadamard")
+    p = s.init(key, cfg, d)
+    x = jax.random.normal(key, (2, n, 9, d))
+    got = s.apply(p, x, cfg)                        # kernel path
+    want = s.combine(p, x, cfg)                     # reference path
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_index_embed_kernel_matches_reference(key):
+    n, d = 3, 32
+    cfg = MuxConfig(n=n, demux="index_embed", use_kernel=True)
+    s = get_demux("index_embed")
+    p = s.init(key, cfg, d)
+    h = jax.random.normal(key, (2, 5, d))
+    ie = jax.random.normal(key, (2, n, d))
+    got = s.apply(p, h, cfg, index_embeds=ie)       # kernel path
+    want = s.separate(p, h, cfg, index_embeds=ie)   # reference path
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_strategies_without_kernel_fall_back(key):
+    """use_kernel on a kernel-less strategy silently uses the reference
+    combine — serving configs stay portable across strategies."""
+    n, d = 2, 16
+    cfg = MuxConfig(n=n, strategy="rotation", use_kernel=True)
+    s = get_mux("rotation")
+    p = s.init(key, cfg, d)
+    x = jax.random.normal(key, (1, n, 3, d))
+    np.testing.assert_allclose(s.apply(p, x, cfg), s.combine(p, x, cfg),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# construction-time validation
+# ---------------------------------------------------------------------------
+
+def test_unknown_strategy_lists_registered():
+    with pytest.raises(ValueError, match="registered"):
+        MuxConfig(strategy="definitely_not_registered")
+    with pytest.raises(ValueError, match="registered"):
+        MuxConfig(demux="definitely_not_registered")
+
+
+def test_n_below_one_rejected():
+    with pytest.raises(ValueError, match="n"):
+        MuxConfig(n=0)
+
+
+def test_binary_requires_divisible_width():
+    with pytest.raises(ValueError, match="d % n"):
+        _tiny_model_cfg(n=3, strategy="binary")   # 32 % 3 != 0
+    _tiny_model_cfg(n=4, strategy="binary")       # 32 % 4 == 0: fine
+
+
+def test_nonlinear_requires_square_width():
+    with pytest.raises(ValueError, match="square"):
+        _tiny_model_cfg(n=2, strategy="nonlinear")  # 32 not a square
+    get_mux("nonlinear").validate(MuxConfig(n=2, strategy="nonlinear"), 36)
+
+
+def test_nonlinear_honors_learned_flag(key):
+    """Text MuxConfigs carry ``learned``; nonlinear freezes its conv nets
+    when learned=False and trains them when learned=True (configs without
+    the field — images — default to learned, paper A.11)."""
+    d = 16
+    s = get_mux("nonlinear")
+    cfg_f = MuxConfig(n=2, strategy="nonlinear")
+    cfg_l = MuxConfig(n=2, strategy="nonlinear", learned=True)
+    p = s.init(key, cfg_f, d)
+    x = jax.random.normal(key, (1, 2, 3, d))
+    g_f = jax.grad(lambda q: jnp.sum(s.combine(q, x, cfg_f) ** 2))(p)["w1"]
+    g_l = jax.grad(lambda q: jnp.sum(s.combine(q, x, cfg_l) ** 2))(p)["w1"]
+    assert float(jnp.abs(g_f).max()) == 0.0
+    assert float(jnp.abs(g_l).max()) > 0.0
+
+
+def test_rotation_rejects_colliding_shifts(key):
+    """d < n would assign the same shift to two instances — rejected on the
+    direct init path too, not just via ModelConfig."""
+    with pytest.raises(ValueError, match="d >= n"):
+        get_mux("rotation").init(key, MuxConfig(n=4, strategy="rotation"), 2)
+
+
+def test_lowrank_rejects_empty_subspaces(key):
+    """d < n would give every instance a rank-0 subspace (zero mixture)."""
+    with pytest.raises(ValueError, match="d >= n"):
+        get_mux("lowrank").init(key, MuxConfig(n=40, strategy="lowrank"), 32)
+    # d % n != 0 stays allowed: the paper's construction drops tail rows
+    get_mux("lowrank").init(key, MuxConfig(n=5, strategy="lowrank"), 32)
+
+
+def test_duplicate_registration_rejected():
+    """Re-registering a live name raises instead of silently replacing the
+    builtin; unregister_mux is the explicit replacement path."""
+    with pytest.raises(ValueError, match="already registered"):
+        @register_mux("hadamard")
+        class Impostor(MuxStrategy):
+            pass
+    assert type(get_mux("hadamard")).__name__ == "HadamardMux"
+
+
+# ---------------------------------------------------------------------------
+# rotation strategy semantics
+# ---------------------------------------------------------------------------
+
+def test_rotation_is_isometry(key):
+    n, d = 4, 32
+    cfg = MuxConfig(n=n, strategy="rotation")
+    s = get_mux("rotation")
+    x = jax.random.normal(key, (2, n, 5, d))
+    t = s.transform({}, x, cfg)
+    np.testing.assert_allclose(jnp.linalg.norm(t, axis=-1),
+                               jnp.linalg.norm(x, axis=-1), rtol=1e-5)
+
+
+def test_rotation_shifts_are_distinct(key):
+    """Each index gets a distinct cyclic shift — the binding that makes
+    instance order recoverable."""
+    n, d = 4, 32
+    cfg = MuxConfig(n=n, strategy="rotation")
+    s = get_mux("rotation")
+    x = jnp.broadcast_to(jax.random.normal(key, (1, 1, 1, d)), (1, n, 1, d))
+    t = s.transform({}, x, cfg)
+    for i in range(n):
+        for j in range(i + 1, n):
+            assert float(jnp.abs(t[0, i] - t[0, j]).max()) > 1e-4
+
+
+# ---------------------------------------------------------------------------
+# end-to-end extensibility (the point of the API)
+# ---------------------------------------------------------------------------
+
+def test_new_strategy_runs_end_to_end_without_core_edits(key):
+    """A strategy defined HERE registers and runs through Backbone.apply —
+    no edits to core dispatch code."""
+
+    @register_mux("_test_sign_flip")
+    class SignFlipMux(MuxStrategy):
+        def init(self, key, cfg, d, *, param_dtype=jnp.float32):
+            s = jnp.sign(jax.random.normal(key, (cfg.n, d)) + 1e-6)
+            return {"s": s.astype(param_dtype)}
+
+        def transform(self, params, x, cfg):
+            s = self._maybe_freeze(params["s"].astype(x.dtype), cfg)
+            return x * s[None, :, None, :]
+
+    try:
+        cfg = _tiny_model_cfg(n=2, strategy="_test_sign_flip")
+        params = Backbone.init(key, cfg)
+        toks = jax.random.randint(key, (2, 2, 6), 0, cfg.vocab)
+        out = Backbone.apply(params, toks, cfg)
+        assert out["logits"].shape == (2, 2, 6, cfg.vocab)
+        assert jnp.isfinite(out["logits"]).all()
+    finally:
+        unregister_mux("_test_sign_flip")
+    with pytest.raises(ValueError, match="registered"):
+        MuxConfig(strategy="_test_sign_flip")
