@@ -110,6 +110,8 @@ def render_repro():
             ["strategy", "N", "task acc", "retrieval acc"], table))
 
     rows = bench("memory_overhead")
+    if isinstance(rows, dict):    # {"rows": [...], "decode_step_donation"}
+        rows = rows.get("rows")
     if rows:
         table = [[r["n"], f"{r['analytic_total_mb']:.0f}",
                   f"{r['analytic_ratio']:.2f}x",

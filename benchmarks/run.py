@@ -28,6 +28,7 @@ SUITES = {
     "fig8a": mux_strategies.run,      # mux strategies
     "fig12": memory_overhead.run,     # memory overhead
     "roofline": roofline.run,         # §Roofline table from dry-run records
+    "serving": throughput_vs_n.run_continuous,  # continuous vs static batching
 }
 
 

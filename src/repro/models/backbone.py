@@ -371,9 +371,9 @@ class Backbone:
     # -- full-sequence forward (train / prefill) ----------------------------------
 
     @staticmethod
-    def apply(params, tokens, cfg: ModelConfig, *, context=None, mesh=None,
-              mesh_info: MeshInfo = SINGLE, cache=None,
-              last_only: bool = False):
+    def apply(params, tokens, cfg: ModelConfig, *, context=None,
+              cross_kv=None, mesh=None, mesh_info: MeshInfo = SINGLE,
+              cache=None, last_only: bool = False):
         """tokens: (B, N, L) when mux active else (B, L).
 
         Returns dict(hidden, demuxed, logits, index_embeds, aux, cache).
@@ -386,10 +386,13 @@ class Backbone:
         one place DataMUX pays an N× cost); at 32k prefill that tensor
         dominates the memory AND collective roofline terms (§Perf A5), and
         next-token serving never needs it.
+
+        ``cross_kv``: pre-encoded context K/V (``encode_context``) — pass it
+        to skip re-encoding ``context`` (the serving engine encodes once per
+        request and threads it through prefill and every decode step).
         """
         mux = cfg.mux
-        cross_kv = None
-        if context is not None:
+        if cross_kv is None and context is not None:
             cross_kv = Backbone.encode_context(params, context, cfg,
                                                mesh=mesh, mesh_info=mesh_info)
         if mux.active:
@@ -441,36 +444,53 @@ class Backbone:
 
     @staticmethod
     def decode_step(params, tokens, cache, cache_index, cfg: ModelConfig, *,
-                    index_embeds=None, cross_kv=None, mesh=None,
-                    mesh_info: MeshInfo = SINGLE):
+                    index_embeds=None, cross_kv=None, lane_mask=None,
+                    mesh=None, mesh_info: MeshInfo = SINGLE):
         """One decode step.
 
         tokens: (B, N) last generated token per stream when mux active,
-        else (B,).  cache_index: scalar int32 — absolute position (including
-        the prefix) being written.  Returns (logits, new_cache):
-        logits (B, N, vocab) when mux active else (B, vocab).
+        else (B,).  cache_index: absolute position (including the prefix)
+        being written — a scalar int32 (all slots in lock-step) or a (B,)
+        int32 vector (continuous batching: each backbone slot decodes at
+        its own position).  lane_mask: optional (B, N) 0/1 — retired lanes
+        contribute nothing to the mixed stream (φ^i(0) = 0 for the linear
+        strategies) and their logits are zeroed, so a freed lane neither
+        pollutes the superposition nor leaks stale predictions.
+        Returns (logits, new_cache): logits (B, N, vocab) when mux active
+        else (B, vocab).
         """
         mux = cfg.mux
+        ci = jnp.asarray(cache_index, jnp.int32)
         if mux.active:
             b, n = tokens.shape
             emb = Backbone.embed(params, tokens[:, :, None], cfg)  # (B,N,1,d)
+            if lane_mask is not None:
+                emb = emb * lane_mask[:, :, None, None].astype(emb.dtype)
             x = get_mux(mux.strategy).apply(params["mux"], emb,
                                             mux)                  # (B,1,d)
         else:
             b = tokens.shape[0]
             x = Backbone.embed(params, tokens[:, None], cfg)       # (B,1,d)
+            if lane_mask is not None:
+                x = x * lane_mask[:, :1, None].astype(x.dtype)
 
         positions = jnp.broadcast_to(
-            jnp.asarray(cache_index, jnp.int32), (b, 1))
+            ci[:, None] if ci.ndim else ci, (b, 1))
         h, new_cache, _ = Backbone._run_blocks(
             params, x, cfg, positions=positions, cache=cache,
-            cache_index=cache_index, cross_kv=cross_kv, mesh=mesh,
+            cache_index=ci, cross_kv=cross_kv, mesh=mesh,
             mesh_info=mesh_info)
 
         if mux.active:
             demuxed = get_demux(mux.demux).apply(
                 params["demux"], h, mux, index_embeds=index_embeds)
             logits = Backbone.logits(params, demuxed[:, :, 0], cfg)  # (B,N,V)
+            if lane_mask is not None:
+                logits = jnp.where(lane_mask[:, :, None].astype(bool),
+                                   logits, 0.0)
         else:
             logits = Backbone.logits(params, h[:, 0], cfg)           # (B,V)
+            if lane_mask is not None:
+                logits = jnp.where(lane_mask[:, :1].astype(bool),
+                                   logits, 0.0)
         return logits, new_cache

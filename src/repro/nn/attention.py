@@ -206,7 +206,10 @@ class Attention:
         """x: (B, L, D). Returns (out, new_cache).
 
         Full-sequence mode (cache None): causal/window mask over x itself.
-        Decode mode: L == 1; writes k/v at ``cache_index`` (scalar int32).
+        Decode mode: L == 1; writes k/v at ``cache_index`` — a scalar int32
+        (all batch rows at the same position: the classic lock-step engine)
+        or a (B,) int32 vector (continuous batching: each backbone slot at
+        its own position, so slots can be admitted/retired independently).
         """
         b, l, _ = x.shape
         q = Linear.apply(params["wq"], x).reshape(b, l, cfg.n_heads, cfg.head_dim)
@@ -282,14 +285,28 @@ class Attention:
             new_cache = None
         else:
             slots = cache["k"].shape[1]
-            slot = (cache_index % slots).astype(jnp.int32)
-            k_cache = jax.lax.dynamic_update_slice(
-                cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
-            v_cache = jax.lax.dynamic_update_slice(
-                cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
-            pos = jax.lax.dynamic_update_slice(
-                cache["pos"], jnp.broadcast_to(positions, (b, 1)).astype(jnp.int32),
-                (0, slot))
+            ci = jnp.asarray(cache_index, jnp.int32)
+            if ci.ndim:
+                # Per-slot positions (B,): each batch row writes its own slot.
+                rows = jnp.arange(b)
+                slot = (ci % slots).astype(jnp.int32)
+                k_cache = cache["k"].at[rows, slot].set(
+                    k[:, 0].astype(cache["k"].dtype))
+                v_cache = cache["v"].at[rows, slot].set(
+                    v[:, 0].astype(cache["v"].dtype))
+                pos = cache["pos"].at[rows, slot].set(
+                    jnp.broadcast_to(positions, (b, 1))[:, 0]
+                    .astype(jnp.int32))
+            else:
+                slot = (ci % slots).astype(jnp.int32)
+                k_cache = jax.lax.dynamic_update_slice(
+                    cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+                v_cache = jax.lax.dynamic_update_slice(
+                    cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+                pos = jax.lax.dynamic_update_slice(
+                    cache["pos"],
+                    jnp.broadcast_to(positions, (b, 1)).astype(jnp.int32),
+                    (0, slot))
             new_cache = {"k": k_cache, "v": v_cache, "pos": pos}
             mask = make_attention_mask(
                 jnp.broadcast_to(positions, (b, 1)), pos, causal=cfg.causal,
@@ -472,14 +489,28 @@ class MLA:
             # Absorbed-matrix decode (DeepSeek-V3 serving form): attention is
             # computed entirely in the compressed latent space, so the cache is
             # never expanded to per-head K/V (that would be O(S*H*d) bytes).
-            ckv_c = jax.lax.dynamic_update_slice(
-                cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, cache_index, 0))
-            krope_c = jax.lax.dynamic_update_slice(
-                cache["krope"], krope.astype(cache["krope"].dtype),
-                (0, cache_index, 0))
-            pos = jax.lax.dynamic_update_slice(
-                cache["pos"], jnp.broadcast_to(positions, (b, 1)).astype(jnp.int32),
-                (0, cache_index))
+            ci = jnp.asarray(cache_index, jnp.int32)
+            if ci.ndim:
+                # Per-slot positions (B,): per-row latent-cache writes.
+                rows = jnp.arange(b)
+                ckv_c = cache["ckv"].at[rows, ci].set(
+                    ckv[:, 0].astype(cache["ckv"].dtype))
+                krope_c = cache["krope"].at[rows, ci].set(
+                    krope[:, 0].astype(cache["krope"].dtype))
+                pos = cache["pos"].at[rows, ci].set(
+                    jnp.broadcast_to(positions, (b, 1))[:, 0]
+                    .astype(jnp.int32))
+            else:
+                ckv_c = jax.lax.dynamic_update_slice(
+                    cache["ckv"], ckv.astype(cache["ckv"].dtype),
+                    (0, ci, 0))
+                krope_c = jax.lax.dynamic_update_slice(
+                    cache["krope"], krope.astype(cache["krope"].dtype),
+                    (0, ci, 0))
+                pos = jax.lax.dynamic_update_slice(
+                    cache["pos"],
+                    jnp.broadcast_to(positions, (b, 1)).astype(jnp.int32),
+                    (0, ci))
             new_cache = {"ckv": ckv_c, "krope": krope_c, "pos": pos}
             q_nope = q[..., : cfg.qk_nope_head_dim]
             q_rope = q[..., cfg.qk_nope_head_dim:]

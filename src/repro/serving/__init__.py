@@ -1,4 +1,16 @@
 from repro.serving.engine import Engine, ServeState
-from repro.serving.kvcache import cache_bytes
+from repro.serving.kvcache import (KVSlotAllocator, cache_bytes,
+                                   cache_bytes_per_stream, pytree_bytes)
+from repro.serving.scheduler import (ContinuousScheduler, Request,
+                                     SchedulerStats, poisson_trace,
+                                     static_batch_steps)
+from repro.serving.slots import SlotTable
 
-__all__ = ["Engine", "ServeState", "cache_bytes"]
+__all__ = [
+    "Engine", "ServeState",
+    "KVSlotAllocator", "cache_bytes", "cache_bytes_per_stream",
+    "pytree_bytes",
+    "ContinuousScheduler", "Request", "SchedulerStats", "poisson_trace",
+    "static_batch_steps",
+    "SlotTable",
+]

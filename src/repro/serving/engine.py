@@ -8,6 +8,21 @@ matmul, demux applied per step to the final hidden state.
 Flow:  prefill(prompts (B, N, Lp)) -> ServeState{cache, index_embeds, pos}
        step(state, last_tokens (B, N)) -> (logits (B, N, V), state)
 
+Two decode regimes share the same jitted step:
+
+  * lock-step (``generate``): scalar ``pos`` — every slot at the same
+    position, the classic fixed-(B, N) grid.
+  * continuous batching (``serving.scheduler``): ``pos`` is a (B,) vector
+    and ``lane_mask`` (B, N) marks live lanes, so slots prefill/decode/retire
+    independently.  ``prime()`` builds the prefix-primed cache the slot
+    allocator resets retired slots back to.
+
+The decode-step cache is donated to the jitted step (``donate_argnums``):
+each step updates the cache buffers in place instead of copying the whole
+pytree (measured in ``benchmarks/memory_overhead.py``).  The cache inside a
+``ServeState`` is therefore consumed by ``step`` — keep only the returned
+state, never re-step a stale one.
+
 The engine is strategy-agnostic: mux/demux schemes resolve by name from
 ``repro.core.strategies`` inside the backbone, so any registered strategy
 (including fused ``kernel_apply`` paths via ``cfg.mux.use_kernel``) serves
@@ -30,7 +45,9 @@ from repro.nn.moe import SINGLE, MeshInfo
 @dataclasses.dataclass
 class ServeState:
     cache: Any
-    pos: jnp.ndarray                     # scalar int32: next absolute position
+    pos: jnp.ndarray                     # int32: next absolute position —
+                                         # scalar (lock-step) or (B,) vector
+                                         # (continuous batching)
     index_embeds: Optional[jnp.ndarray]  # (B, N, d) for prefix-protocol demux
                                          # strategies (uses_prefix), else None
     cross_kv: Any = None
@@ -47,16 +64,21 @@ class Engine:
         self.mesh_info = mesh_info
         self._prefill = jax.jit(self._prefill_impl) if jit \
             else self._prefill_impl
-        self._step = jax.jit(self._step_impl) if jit else self._step_impl
+        # Donate the cache: the decode step aliases the KV buffers instead of
+        # allocating a second full cache every token (no-op on backends
+        # without donation support, e.g. CPU — then it simply copies).
+        self._step = jax.jit(self._step_impl, donate_argnums=(2,)) if jit \
+            else self._step_impl
+        self._prime = jax.jit(self._prime_impl) if jit else self._prime_impl
 
     # -- impl -------------------------------------------------------------------
 
-    def _prefill_impl(self, params, tokens, context):
+    def _prefill_impl(self, params, tokens, cross_kv):
         cfg = self.cfg
         cache = Backbone.init_cache(cfg, self.batch, self.max_len)
         # last_only: never materialise the (B, N, L, d) demux tensor —
         # serving prefill needs next-token logits only (§Perf A5)
-        out = Backbone.apply(params, tokens, cfg, context=context,
+        out = Backbone.apply(params, tokens, cfg, cross_kv=cross_kv,
                              cache=cache, mesh=self.mesh,
                              mesh_info=self.mesh_info, last_only=True)
         lp = tokens.shape[-1] + cfg.mux.prefix_len
@@ -64,32 +86,78 @@ class Engine:
         return (out["cache"], out["index_embeds"], last_logits,
                 jnp.asarray(lp, jnp.int32))
 
-    def _step_impl(self, params, tokens, cache, pos, index_embeds, cross_kv):
+    def _prime_impl(self, params):
+        """Prefix-only prefill: run the demux prefix (no content tokens)
+        through the backbone so the cache holds exactly the prefix K/V and
+        ``index_embeds`` are captured.  For causal models the prefix hidden
+        states attend only to the prefix, so this primed state is
+        input-independent — the slot allocator resets retired slots back to
+        it without re-running any prefill."""
+        cfg = self.cfg
+        cache = Backbone.init_cache(cfg, self.batch, self.max_len)
+        empty = jnp.zeros((self.batch, cfg.mux.n, 0), jnp.int32)
+        out = Backbone.apply(params, empty, cfg, cache=cache,
+                             mesh=self.mesh, mesh_info=self.mesh_info,
+                             last_only=True)
+        return out["cache"], out["index_embeds"]
+
+    def _step_impl(self, params, tokens, cache, pos, index_embeds, cross_kv,
+                   lane_mask):
         return Backbone.decode_step(
             params, tokens, cache, pos, self.cfg,
             index_embeds=index_embeds, cross_kv=cross_kv,
-            mesh=self.mesh, mesh_info=self.mesh_info)
+            lane_mask=lane_mask, mesh=self.mesh, mesh_info=self.mesh_info)
 
     # -- public API -----------------------------------------------------------------
 
     def prefill(self, prompts, context=None) -> tuple[jnp.ndarray, ServeState]:
         """prompts: (B, N, Lp) muxed or (B, Lp).  Returns (last-token logits,
-        state)."""
+        state).  ``context`` is encoded exactly once here; the resulting
+        ``cross_kv`` threads through prefill and every decode step."""
         cross_kv = None
         if context is not None:
             cross_kv = Backbone.encode_context(
                 self.params, jnp.asarray(context), self.cfg,
                 mesh=self.mesh, mesh_info=self.mesh_info)
         cache, index_embeds, last_logits, pos = self._prefill(
-            self.params, jnp.asarray(prompts), context)
+            self.params, jnp.asarray(prompts), cross_kv)
         return last_logits, ServeState(cache=cache, pos=pos,
                                        index_embeds=index_embeds,
                                        cross_kv=cross_kv)
 
-    def step(self, state: ServeState, tokens) -> tuple[jnp.ndarray, ServeState]:
+    def prime(self, context=None) -> ServeState:
+        """Prefix-primed state for continuous batching: cache holds only the
+        demux-prefix K/V, ``pos`` is a (B,) vector at ``prefix_len``.  With a
+        non-prefix demux (or mux inactive) the cache is simply fresh and
+        ``pos`` starts at 0."""
+        cfg = self.cfg
+        cross_kv = None
+        if context is not None:
+            cross_kv = Backbone.encode_context(
+                self.params, jnp.asarray(context), self.cfg,
+                mesh=self.mesh, mesh_info=self.mesh_info)
+        p = cfg.mux.prefix_len
+        if cfg.mux.active and p:
+            cache, index_embeds = self._prime(self.params)
+        else:
+            cache = Backbone.init_cache(cfg, self.batch, self.max_len)
+            index_embeds = None
+        pos = jnp.full((self.batch,), p, jnp.int32)
+        return ServeState(cache=cache, pos=pos, index_embeds=index_embeds,
+                          cross_kv=cross_kv)
+
+    def step(self, state: ServeState, tokens,
+             lane_mask=None) -> tuple[jnp.ndarray, ServeState]:
+        """One decode step.  ``state.pos`` may be scalar (lock-step) or (B,)
+        (continuous); ``lane_mask`` (B, N) masks retired lanes out of the
+        mixed stream and the logits.  ``state.cache`` is donated — use the
+        returned state from here on."""
+        if lane_mask is not None:
+            lane_mask = jnp.asarray(lane_mask)
         logits, cache = self._step(self.params, jnp.asarray(tokens),
                                    state.cache, state.pos,
-                                   state.index_embeds, state.cross_kv)
+                                   state.index_embeds, state.cross_kv,
+                                   lane_mask)
         return logits, dataclasses.replace(state, cache=cache,
                                            pos=state.pos + 1)
 

@@ -1,10 +1,29 @@
-"""KV/state cache accounting — bytes per request at a given context length.
+"""KV/state cache: slot allocator + bytes accounting.
 
-Used by the memory benchmark (paper Fig 12 analogue) and the roofline report.
-The headline DataMUX serving win: N streams share ONE cache slot, so cache
-bytes per *stream* divide by N."""
+Two halves:
+
+  * ``KVSlotAllocator`` — owns the decode-cache pytree for B backbone slots
+    (each shared by N mux lanes: the headline DataMUX serving win) and
+    supports per-slot reset without re-jitting: ``reset_slots(mask)`` is a
+    single jitted ``where`` over the pytree that restores masked slots to
+    the primed template (prefix K/V for prefix-protocol demuxers, zeros
+    otherwise) while leaving live slots bit-for-bit untouched.  The cache
+    argument is donated, so a reset rewrites buffers in place where the
+    backend supports donation.
+  * ``cache_bytes`` / ``cache_bytes_per_stream`` — analytic accounting used
+    by the memory benchmark (paper Fig 12 analogue) and the roofline report;
+    ``tests/test_kvcache.py`` pins it to the actual bytes of the pytree
+    ``Backbone.init_cache`` returns.
+
+Cache pytree layout (see ``Backbone.init_cache``): ``head``/``tail`` leaves
+carry the slot (batch) axis first; ``blocks`` leaves are stacked over scan
+groups, so their slot axis is second.
+"""
 from __future__ import annotations
 
+from typing import Any, Optional
+
+import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
@@ -50,3 +69,90 @@ def cache_bytes_per_stream(cfg: ModelConfig, seq_len: int) -> float:
     cache (the beyond-paper serving result)."""
     per_slot = cache_bytes(cfg, 1, seq_len + cfg.mux.prefix_len)
     return per_slot / max(1, cfg.mux.n)
+
+
+def pytree_bytes(tree: Any) -> int:
+    """Actual bytes of a cache pytree (parity target for ``cache_bytes``)."""
+    return sum(leaf.size * leaf.dtype.itemsize
+               for leaf in jax.tree.leaves(tree)
+               if hasattr(leaf, "dtype"))
+
+
+# ---------------------------------------------------------------------------
+# Slot allocator
+# ---------------------------------------------------------------------------
+
+def _masked_restore(leaf, template, mask, slot_axis: int):
+    """where(mask) along ``slot_axis``: masked slots take the template."""
+    if not hasattr(leaf, "ndim"):
+        return leaf
+    shape = [1] * leaf.ndim
+    shape[slot_axis] = mask.shape[0]
+    m = mask.reshape(shape)
+    return jnp.where(m, template, leaf)
+
+
+def reset_cache_slots(cache, template, slot_mask):
+    """Restore masked slots of a ``Backbone.init_cache``-shaped pytree to
+    ``template`` values; unmasked slots pass through bit-for-bit.
+
+    ``slot_mask``: (B,) bool.  ``head``/``tail`` leaves have the slot axis
+    first; ``blocks`` leaves are stacked over scan groups (slot axis 1).
+    """
+    mask = jnp.asarray(slot_mask, bool)
+    out = dict(cache)
+    for section, axis in (("head", 0), ("tail", 0), ("blocks", 1)):
+        out[section] = jax.tree.map(
+            lambda c, z, a=axis: _masked_restore(c, z, mask, a),
+            cache[section], template[section])
+    return out
+
+
+class KVSlotAllocator:
+    """Owns the decode cache for ``batch`` backbone slots.
+
+    The allocator holds the single live cache pytree plus a primed template
+    (one extra cache worth of memory — the price of O(1) slot recycling).
+    ``reset_slots`` is jitted once at construction: the slot mask is a
+    runtime argument, so recycling any subset of slots never re-traces, and
+    the live cache is donated into the reset.
+
+    Flow: the engine's decode step consumes ``.cache`` and returns the
+    updated pytree, which the caller hands back via ``adopt``; when a slot's
+    lanes have all retired, ``reset_slots`` rewinds just that slot to the
+    primed state (prefix K/V, pos sentinel -1 elsewhere) so a fresh set of
+    requests can be admitted at position ``prefix_len``.
+    """
+
+    def __init__(self, cfg: ModelConfig, batch: int, max_len: int, *,
+                 template: Optional[Any] = None, jit: bool = True):
+        from repro.models import Backbone
+        self.cfg = cfg
+        self.batch = batch
+        self.max_len = max_len
+        self.template = template if template is not None \
+            else Backbone.init_cache(cfg, batch, max_len)
+        # Real copy, not aliases: the live cache is donated into the jitted
+        # reset/step, which must never invalidate the template's buffers.
+        self.cache = jax.tree.map(jnp.copy, self.template)
+        if jit:
+            self._reset = jax.jit(reset_cache_slots, donate_argnums=(0,))
+        else:
+            self._reset = reset_cache_slots
+
+    def adopt(self, cache) -> None:
+        """Take ownership of the post-step cache pytree."""
+        self.cache = cache
+
+    def reset_slots(self, slot_mask) -> None:
+        """Rewind masked slots to the primed template (jitted, no re-trace).
+
+        Live slots are untouched bit-for-bit — resetting a retired slot
+        while its neighbours keep decoding is the core continuous-batching
+        primitive."""
+        self.cache = self._reset(self.cache, self.template,
+                                 jnp.asarray(slot_mask, bool))
+
+    def slot_bytes(self) -> int:
+        """Actual bytes of one slot's share of the live cache."""
+        return pytree_bytes(self.cache) // max(1, self.batch)

@@ -1,0 +1,267 @@
+"""Continuous-batching scheduler for multiplexed serving.
+
+The lock-step ``Engine.generate`` grid serves a fixed (B, N) wave: every
+request must arrive together, run the same number of steps, and finish
+together — one long generation holds B·N−1 streams hostage.  This module
+adds stream-level granularity on top of the same jitted decode step:
+
+  * requests queue up with their own arrival time, prompt, and length budget
+    (``Request``; ``poisson_trace`` replays a Poisson arrival process);
+  * a ``SlotTable`` maps B backbone slots × N mux lanes to live request ids;
+  * admission fills free lanes; a freshly admitted request's prompt *ramps*
+    through the decode path one token per step, muxed alongside the slot's
+    other lanes which keep decoding undisturbed — a slot is re-muxed with
+    fresh prompts without re-prefilling its live lanes;
+  * retirement (EOS or length budget) frees a lane immediately: the lane is
+    masked out of the mixed stream and its logits zeroed (``lane_mask``)
+    while the slot's remaining lanes continue;
+  * when a slot's lanes have all retired, the ``KVSlotAllocator`` rewinds
+    just that slot to the prefix-primed cache (one jitted masked ``where``,
+    no re-trace) and its position rewinds to ``prefix_len``.
+
+Per-slot positions (the ``(B,)`` ``pos`` vector threaded through
+``Backbone.decode_step``) are what make the slots independent: slot 0 can be
+at position 97 of a long generation while slot 1 re-admits at position
+``prefix_len``.
+
+Prefix protocol note: for causal backbones the demux-prefix hidden states
+(``index_embeds``) and prefix K/V depend only on the prefix itself, so the
+scheduler computes them once (``Engine.prime``) and reuses them across every
+slot recycle — admission never re-runs a prefill.  For bidirectional
+backbones (T-MUX) this reuse is the same approximation the lock-step decode
+path already makes.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.serving.engine import Engine, ServeState
+from repro.serving.kvcache import KVSlotAllocator
+from repro.serving.slots import SlotTable
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (Lp,) int32 prompt tokens
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+    arrival: int = 0              # scheduler-clock step of arrival
+    # runtime state (owned by the scheduler)
+    admitted_step: int = -1
+    finished_step: int = -1
+    output: list = dataclasses.field(default_factory=list)
+    fed: int = 0                  # prompt tokens consumed so far (ramp cursor)
+
+    @property
+    def ramping(self) -> bool:
+        return self.fed < len(self.prompt)
+
+    @property
+    def done(self) -> bool:
+        return self.finished_step >= 0
+
+
+def poisson_trace(n_requests: int, *, rate: float, prompt_len: int,
+                  gen_len: int, vocab: int, max_total: int = 0,
+                  eos_id: Optional[int] = None, seed: int = 0
+                  ) -> list[Request]:
+    """Poisson arrival process with mixed prompt/generation lengths.
+
+    ``rate``: mean arrivals per decode step.  Prompt lengths are uniform in
+    [1, 2·prompt_len]; generation budgets are geometric with mean
+    ``gen_len`` (the long tail is what static batching chokes on).
+    ``max_total`` clips prompt+gen so every request fits the cache.
+    """
+    rng = np.random.default_rng(seed)
+    arrivals = np.floor(np.cumsum(rng.exponential(1.0 / rate, n_requests)))
+    reqs = []
+    for i in range(n_requests):
+        lp = int(rng.integers(1, 2 * prompt_len + 1))
+        gen = int(min(rng.geometric(1.0 / gen_len), 4 * gen_len))
+        if max_total:
+            lp = min(lp, max_total - 1)
+            gen = max(1, min(gen, max_total - lp))
+        reqs.append(Request(
+            rid=i, prompt=rng.integers(0, vocab, lp).astype(np.int32),
+            max_new_tokens=gen, eos_id=eos_id, arrival=int(arrivals[i])))
+    return reqs
+
+
+def static_batch_steps(requests: list[Request], n_slots: int,
+                       n_lanes: int) -> int:
+    """Decode-step count of the lock-step baseline on the same trace.
+
+    The static engine groups requests in arrival order into full (B·N)-lane
+    waves; each wave prefills together (prompt cost excluded — one fused
+    prefill call, a handicap in the static engine's favour) and decodes
+    until its *longest* generation finishes.  Head-of-line blocking is the
+    sum of per-wave maxima."""
+    lanes = n_slots * n_lanes
+    total = 0
+    for g in range(0, len(requests), lanes):
+        total += max(r.max_new_tokens for r in requests[g:g + lanes])
+    return total
+
+
+@dataclasses.dataclass
+class SchedulerStats:
+    decode_steps: int = 0
+    idle_steps: int = 0
+    admitted: int = 0
+    finished: int = 0
+    slot_resets: int = 0
+    generated_tokens: int = 0
+    occupancy_sum: float = 0.0          # Σ per-step lane occupancy
+    slot_active_steps: Optional[np.ndarray] = None  # (B,) useful-work steps
+
+    @property
+    def mean_occupancy(self) -> float:
+        return self.occupancy_sum / max(1, self.decode_steps)
+
+
+class ContinuousScheduler:
+    """Continuous batching over an ``Engine``: stream-level admission and
+    retirement on a B-slot × N-lane grid sharing one jitted decode step."""
+
+    def __init__(self, engine: Engine):
+        self.engine = engine
+        cfg = engine.cfg
+        self.n_slots = engine.batch
+        self.n_lanes = cfg.mux.n if cfg.mux.active else 1
+        self.prefix_len = cfg.mux.prefix_len
+
+        primed = engine.prime()
+        self.allocator = KVSlotAllocator(
+            cfg, self.n_slots, engine.max_len, template=primed.cache)
+        self.index_embeds = primed.index_embeds
+        self.cross_kv = primed.cross_kv
+
+        self.table = SlotTable(self.n_slots, self.n_lanes)
+        self.pos = np.full(self.n_slots, self.prefix_len, np.int32)
+        self.queue: collections.deque[Request] = collections.deque()
+        self.requests: dict[int, Request] = {}
+        self.finished: list[Request] = []
+        self.t = 0                       # scheduler clock (steps)
+        self.stats = SchedulerStats(
+            slot_active_steps=np.zeros(self.n_slots, np.int64))
+
+    # -- admission ------------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        need = self.prefix_len + len(req.prompt) + req.max_new_tokens
+        if need > self.engine.max_len:
+            raise ValueError(
+                f"request {req.rid} needs {need} positions but the cache "
+                f"holds {self.engine.max_len}; raise Engine max_len or clip "
+                f"the trace (paged attention is the real fix — ROADMAP)")
+        self.requests[req.rid] = req
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        """Fill free lanes from the queue (arrived requests only).  Empty
+        slots whose position has drifted past ``prefix_len`` are rewound via
+        one batched cache reset before re-occupying."""
+        to_reset = np.zeros(self.n_slots, bool)
+        target: dict[int, int] = {}      # slot -> admission position
+        n_planned = 0
+        for (s, l) in self.table.free_lanes():
+            if not self.queue or self.queue[0].arrival > self.t:
+                break
+            if s not in target:
+                # First admission into this slot this round: an empty slot
+                # rewinds to the primed prefix; a live slot admits in-stream
+                # at its current position (the prompt ramps during decode).
+                target[s] = self.prefix_len if self.table.slot_empty(s) \
+                    else int(self.pos[s])
+            pos = target[s]
+            req = self.queue[0]
+            if pos + len(req.prompt) + req.max_new_tokens > self.engine.max_len:
+                continue  # slot too deep for this request; try another lane
+            self.queue.popleft()
+            if pos != int(self.pos[s]):
+                to_reset[s] = True
+            self.table.occupy(s, l, req.rid)
+            req.admitted_step = self.t
+            n_planned += 1
+        if to_reset.any():
+            self.allocator.reset_slots(to_reset)
+            self.pos[to_reset] = self.prefix_len
+            self.stats.slot_resets += int(to_reset.sum())
+        self.stats.admitted += n_planned
+
+    # -- one decode step --------------------------------------------------------
+
+    def step(self) -> None:
+        """Admit, run one jitted decode step for all B slots, then ramp /
+        sample / retire per lane."""
+        self._admit()
+        mask = self.table.lane_mask()                    # (B, N)
+        tokens = np.zeros((self.n_slots, self.n_lanes), np.int32)
+        for s in range(self.n_slots):
+            for l in range(self.n_lanes):
+                rid = int(self.table.grid[s, l])
+                if rid < 0:
+                    continue
+                req = self.requests[rid]
+                tokens[s, l] = req.prompt[req.fed] if req.ramping \
+                    else req.output[-1]
+
+        state = ServeState(cache=self.allocator.cache, pos=self.pos.copy(),
+                           index_embeds=self.index_embeds,
+                           cross_kv=self.cross_kv)
+        mux_active = self.engine.cfg.mux.active
+        toks = tokens if mux_active else tokens[:, 0]
+        logits, state = self.engine.step(state, toks, lane_mask=mask)
+        self.allocator.adopt(state.cache)
+        self.pos += 1
+        logits = np.asarray(logits)
+        if not mux_active:
+            logits = logits[:, None, :]                  # (B, 1, V)
+
+        for s in range(self.n_slots):
+            for l in range(self.n_lanes):
+                rid = int(self.table.grid[s, l])
+                if rid < 0:
+                    continue
+                req = self.requests[rid]
+                if req.ramping:
+                    req.fed += 1
+                    if req.ramping:      # prompt not fully consumed yet
+                        continue
+                tok = int(np.argmax(logits[s, l]))
+                req.output.append(tok)
+                self.stats.generated_tokens += 1
+                if (len(req.output) >= req.max_new_tokens or
+                        (req.eos_id is not None and tok == req.eos_id)):
+                    self.table.release(s, l)
+                    req.finished_step = self.t
+                    self.finished.append(req)
+                    self.stats.finished += 1
+
+        self.stats.decode_steps += 1
+        self.stats.occupancy_sum += float(mask.mean())
+        self.stats.slot_active_steps += (mask.sum(axis=1) > 0)
+        self.t += 1
+
+    # -- drive a whole trace ------------------------------------------------------
+
+    def run(self, requests: Optional[list[Request]] = None, *,
+            max_steps: int = 100_000) -> SchedulerStats:
+        """Replay a trace to completion.  The clock jumps over fully idle
+        gaps (no live lanes, next arrival in the future) without burning
+        decode steps."""
+        for r in (requests or []):
+            self.submit(r)
+        while (self.queue or self.table.live_requests()) and \
+                self.stats.decode_steps < max_steps:
+            if not self.table.live_requests() and self.queue and \
+                    self.queue[0].arrival > self.t:
+                self.stats.idle_steps += self.queue[0].arrival - self.t
+                self.t = self.queue[0].arrival
+            self.step()
+        return self.stats

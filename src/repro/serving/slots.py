@@ -1,0 +1,74 @@
+"""Slot table: B backbone slots × N mux lanes → live request ids.
+
+The serving unit of DataMUX is a *lane*: one of the N multiplexed streams
+sharing a backbone slot's KV cache.  Continuous batching needs lane-level
+granularity — a slot whose lane 2 finished must admit a new request into
+lane 2 while lanes 0/1/3 keep decoding — so the table tracks occupancy per
+(slot, lane) cell, not per slot.
+
+Pure-Python bookkeeping (no jax): the scheduler turns ``lane_mask()`` into
+the device-side mask each step.  Positions live in the scheduler; cache
+contents live in the ``KVSlotAllocator``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import numpy as np
+
+FREE = -1
+
+
+@dataclasses.dataclass
+class SlotTable:
+    n_slots: int
+    n_lanes: int
+
+    def __post_init__(self):
+        # grid[s][l] = request id or FREE
+        self.grid = np.full((self.n_slots, self.n_lanes), FREE, np.int64)
+
+    # -- queries --------------------------------------------------------------
+
+    def lane_mask(self) -> np.ndarray:
+        """(B, N) float mask: 1 for occupied lanes."""
+        return (self.grid != FREE).astype(np.float32)
+
+    def free_lanes(self) -> Iterator[tuple[int, int]]:
+        """(slot, lane) pairs currently free, slot-major order."""
+        for s in range(self.n_slots):
+            for l in range(self.n_lanes):
+                if self.grid[s, l] == FREE:
+                    yield (s, l)
+
+    def slot_empty(self, slot: int) -> bool:
+        return bool((self.grid[slot] == FREE).all())
+
+    def lane_of(self, rid: int) -> Optional[tuple[int, int]]:
+        hits = np.argwhere(self.grid == rid)
+        return tuple(int(v) for v in hits[0]) if len(hits) else None
+
+    def live_requests(self) -> list[int]:
+        return [int(r) for r in self.grid.ravel() if r != FREE]
+
+    def occupancy(self) -> float:
+        """Fraction of lanes occupied — the mux utilisation the paper's
+        throughput win depends on."""
+        return float((self.grid != FREE).mean())
+
+    # -- transitions ----------------------------------------------------------
+
+    def occupy(self, slot: int, lane: int, rid: int) -> None:
+        if self.grid[slot, lane] != FREE:
+            raise ValueError(
+                f"lane ({slot}, {lane}) already holds request "
+                f"{int(self.grid[slot, lane])}")
+        self.grid[slot, lane] = rid
+
+    def release(self, slot: int, lane: int) -> int:
+        rid = int(self.grid[slot, lane])
+        if rid == FREE:
+            raise ValueError(f"lane ({slot}, {lane}) is already free")
+        self.grid[slot, lane] = FREE
+        return rid

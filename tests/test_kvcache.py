@@ -1,0 +1,122 @@
+"""KV-cache accounting parity + slot-allocator reset semantics.
+
+``kvcache.cache_bytes`` is the analytic number the memory benchmark and
+roofline report quote; it must equal the actual bytes of the pytree
+``Backbone.init_cache`` returns, per architecture family (attn ring-buffer,
+MLA latent, Mamba state, mLSTM/sLSTM state, windowed/global mixes), plus the
+cross-attention K/V for context archs."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_smoke_config
+from repro.models import Backbone
+from repro.serving.engine import Engine
+from repro.serving.kvcache import (KVSlotAllocator, cache_bytes,
+                                   cache_bytes_per_stream, pytree_bytes,
+                                   reset_cache_slots)
+
+# attn (GQA), MLA latent, attn+Mamba hybrid (+MoE), mLSTM/sLSTM mix,
+# sliding-window/global mix — every mixer branch of the accounting.
+PARITY_ARCHS = ["qwen1.5-4b", "deepseek-v3-671b", "jamba-1.5-large-398b",
+                "xlstm-125m", "gemma3-4b"]
+
+
+@pytest.mark.parametrize("arch", PARITY_ARCHS)
+def test_cache_bytes_matches_pytree(arch):
+    cfg = get_smoke_config(arch, mux_n=2)
+    B, L = 3, 24
+    cache = Backbone.init_cache(cfg, B, L)
+    assert cache_bytes(cfg, B, L) == pytree_bytes(cache)
+
+
+@pytest.mark.parametrize("arch", ["llama-3.2-vision-11b", "whisper-base"])
+def test_cache_bytes_includes_cross_kv(arch, key):
+    """Context archs: the accounting's cross-attention term equals the bytes
+    of ``encode_context``'s precomputed K/V pytree."""
+    cfg = get_smoke_config(arch, mux_n=2)
+    B, L = 2, 16
+    params = Backbone.init(key, cfg)
+    ctx = jnp.zeros((B, cfg.context_len, cfg.context_dim), jnp.float32)
+    cross_kv = Backbone.encode_context(params, ctx, cfg)
+    cache = Backbone.init_cache(cfg, B, L)
+    assert cache_bytes(cfg, B, L) == \
+        pytree_bytes(cache) + pytree_bytes(cross_kv)
+
+
+def test_cache_bytes_per_stream_divides_by_n():
+    cfg = get_smoke_config("qwen1.5-4b", mux_n=4)
+    base = dataclasses.replace(
+        cfg, mux=dataclasses.replace(cfg.mux, n=1))
+    assert cache_bytes_per_stream(cfg, 32) < cache_bytes_per_stream(base, 32)
+
+
+# ---------------------------------------------------------------------------
+# Slot allocator
+# ---------------------------------------------------------------------------
+
+def _assert_slot_equal(got, want, slot, *, equal=True):
+    """Compare one slot's rows across two cache pytrees (head/tail leaves
+    carry the slot axis first; scanned ``blocks`` leaves carry it second)."""
+    for section, axis in (("head", 0), ("tail", 0), ("blocks", 1)):
+        for g, w in zip(jax.tree.leaves(got[section]),
+                        jax.tree.leaves(want[section])):
+            gs = np.asarray(jnp.take(g, slot, axis=axis))
+            ws = np.asarray(jnp.take(w, slot, axis=axis))
+            if equal:
+                np.testing.assert_array_equal(gs, ws)
+            elif gs.size and not np.array_equal(gs, ws):
+                return      # found a differing leaf, as expected
+    if not equal:
+        raise AssertionError(f"slot {slot} unexpectedly equals the template")
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-4b", "gemma3-4b", "xlstm-125m"])
+def test_allocator_reset_is_slot_isolated(arch, key):
+    """Resetting slot 0 rewinds it to the primed template bit-for-bit while
+    slot 1's live decode state is untouched — across scanned-block caches
+    (slot axis 1) and head/tail caches (slot axis 0)."""
+    cfg = get_smoke_config(arch, mux_n=2)
+    params = Backbone.init(key, cfg)
+    B = 2
+    eng = Engine(params, cfg, batch=B, max_len=24)
+    primed = eng.prime()
+    alloc = KVSlotAllocator(cfg, B, eng.max_len, template=primed.cache)
+
+    # dirty both slots with a few decode steps
+    state = dataclasses.replace(primed, cache=alloc.cache)
+    toks = jax.random.randint(key, (B, cfg.mux.n), 0, cfg.vocab)
+    for _ in range(3):
+        logits, state = eng.step(state, toks)
+        toks = jnp.argmax(logits, axis=-1)
+    alloc.adopt(state.cache)
+    dirty = jax.tree.map(jnp.copy, alloc.cache)
+
+    alloc.reset_slots(np.array([True, False]))
+    _assert_slot_equal(alloc.cache, alloc.template, 0, equal=True)
+    _assert_slot_equal(alloc.cache, dirty, 1, equal=True)
+    # and slot 0 really was dirty before the reset
+    _assert_slot_equal(dirty, alloc.template, 0, equal=False)
+
+
+def test_reset_cache_slots_pure_function():
+    """reset_cache_slots on a synthetic pytree: masked slots take template
+    values, unmasked pass through."""
+    cache = {"head": [{"k": jnp.arange(12.0).reshape(3, 4)}],
+             "blocks": [{"s": jnp.ones((2, 3, 2))}],
+             "tail": []}
+    template = {"head": [{"k": jnp.zeros((3, 4))}],
+                "blocks": [{"s": jnp.zeros((2, 3, 2))}],
+                "tail": []}
+    out = reset_cache_slots(cache, template, np.array([True, False, True]))
+    k = np.asarray(out["head"][0]["k"])
+    np.testing.assert_array_equal(k[0], 0.0)
+    np.testing.assert_array_equal(k[2], 0.0)
+    np.testing.assert_array_equal(k[1], np.arange(4.0) + 4.0)
+    s = np.asarray(out["blocks"][0]["s"])
+    np.testing.assert_array_equal(s[:, 0], 0.0)
+    np.testing.assert_array_equal(s[:, 1], 1.0)
+    np.testing.assert_array_equal(s[:, 2], 0.0)
