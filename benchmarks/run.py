@@ -13,8 +13,8 @@ import sys
 import time
 
 from benchmarks import (heads_ablation, image_mux, index_variance,
-                        memory_overhead, mux_strategies, retrieval_acc,
-                        roofline, small_models, task_acc_vs_n,
+                        memory_overhead, mux_strategies, paging,
+                        retrieval_acc, roofline, small_models, task_acc_vs_n,
                         throughput_vs_n)
 
 SUITES = {
@@ -29,6 +29,7 @@ SUITES = {
     "fig12": memory_overhead.run,     # memory overhead
     "roofline": roofline.run,         # §Roofline table from dry-run records
     "serving": throughput_vs_n.run_continuous,  # continuous vs static batching
+    "paging": paging.run,             # paged vs contiguous KV cache
 }
 
 

@@ -85,9 +85,7 @@ def _static_trace_throughput(engine, cfg, requests, lp_max):
 
 def _fresh_request(r):
     """Fresh runtime state so a trace can be replayed by several engines."""
-    import dataclasses
-    return dataclasses.replace(r, output=[], fed=0,
-                               admitted_step=-1, finished_step=-1)
+    return r.fresh()
 
 
 def run_continuous(*, n=4, batch=2, num_requests=24, rate=2.0,

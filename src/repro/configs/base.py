@@ -77,6 +77,37 @@ class MuxConfig:
 
 
 # ---------------------------------------------------------------------------
+# Serving config (beyond-paper: continuous batching + paged KV cache)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ServingConfig:
+    """Decode-cache layout for the continuous-batching scheduler.
+
+    ``paged`` swaps the per-slot contiguous ``max_len`` cache regions for a
+    shared page pool with per-slot block tables (``serving/paging.py``):
+    position space is allocated on demand in ``page_size``-token pages, a
+    retired slot returns its pages to the free list, and admission is gated
+    on free pages rather than slot depth — one long generation no longer
+    pins a whole slot's memory.  Only full-attention KV layers are paged;
+    ring-buffer (windowed) attention, MLA-latent, and SSM states are O(1) or
+    already bounded per slot and stay contiguous.
+    """
+    paged: bool = False
+    page_size: int = 16       # tokens per page
+    pool_pages: int = 0       # shared pool size; 0 -> dense equivalent
+                              # (batch * ceil(max_len / page_size) + 1)
+    use_kernel: bool = False  # route paged decode attention through the
+                              # Pallas gather kernel instead of the jnp ref
+
+    def __post_init__(self):
+        if self.page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {self.page_size}")
+        if self.pool_pages < 0:
+            raise ValueError(f"pool_pages must be >= 0, got {self.pool_pages}")
+
+
+# ---------------------------------------------------------------------------
 # Model config
 # ---------------------------------------------------------------------------
 
@@ -122,6 +153,8 @@ class ModelConfig:
     causal: bool = True
     # the paper's technique
     mux: MuxConfig = dataclasses.field(default_factory=MuxConfig)
+    # serving cache layout (continuous batching / paged attention)
+    serving: ServingConfig = dataclasses.field(default_factory=ServingConfig)
     # numerics / compilation
     dtype: str = "bfloat16"
     param_dtype: str = "bfloat16"
@@ -161,7 +194,8 @@ class ModelConfig:
             dim=self.d_model, n_heads=self.n_heads,
             n_kv_heads=self.n_kv_heads, head_dim=self.head_dim_,
             qkv_bias=self.qkv_bias, rope_theta=self.rope_theta,
-            causal=self.causal, window=window, use_flash=use_flash)
+            causal=self.causal, window=window, use_flash=use_flash,
+            paged_kernel=self.serving.use_kernel)
 
     # -- layer pattern ---------------------------------------------------------
 

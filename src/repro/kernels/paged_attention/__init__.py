@@ -1,0 +1,3 @@
+from repro.kernels.paged_attention.ops import paged_attention
+
+__all__ = ["paged_attention"]

@@ -1,0 +1,29 @@
+"""Public op: paged-attention decode (interpret=True on CPU).
+
+``use_kernel=False`` (the default) routes through the jnp gather reference,
+which is bit-for-bit identical to the contiguous decode path; the Pallas
+kernel streams pages through the block table instead of materialising the
+gathered (B, S, H, hd) view.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels.paged_attention import kernel, ref
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+def paged_attention(q, k_pages, v_pages, pos_pages, block_table, q_pos, *,
+                    scale: float, causal: bool = True,
+                    window: Optional[int] = None, use_kernel: bool = False):
+    """q: (B, 1, H, hd) -> (B, 1, H, hd); see ``ref.paged_attention``."""
+    if use_kernel:
+        return kernel.paged_decode_attention(
+            q, k_pages, v_pages, pos_pages, block_table, q_pos, scale=scale,
+            causal=causal, window=window, interpret=_INTERPRET)
+    return ref.paged_attention(q, k_pages, v_pages, pos_pages, block_table,
+                               q_pos, scale=scale, causal=causal,
+                               window=window)

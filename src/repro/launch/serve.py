@@ -11,6 +11,13 @@ lengths and reports the step count against the static baseline):
 
     PYTHONPATH=src python -m repro.launch.serve --smoke --workload poisson \
         --gen 8
+
+Paged KV cache (block tables over a shared page pool; admission checks free
+pages instead of slot depth, so the long-tail generation that a contiguous
+allocator refuses is admitted):
+
+    PYTHONPATH=src python -m repro.launch.serve --smoke --workload poisson \
+        --paged --gen 8
 """
 import argparse
 import os
@@ -58,12 +65,19 @@ def _run_workload(args, cfg, mesh, mi, jax, Backbone, Engine):
     static = static_batch_steps(trace, args.batch, n)
     lanes = args.batch * n
     print(f"[serve] workload={args.workload}: {args.num_requests} requests "
-          f"over {lanes} lanes ({args.batch} slots x {n})")
+          f"over {lanes} lanes ({args.batch} slots x {n})"
+          + (f", paged (page_size={cfg.serving.page_size})"
+             if cfg.serving.paged else ""))
     print(f"[serve] continuous: {stats.decode_steps} decode steps, "
           f"{stats.generated_tokens} tokens in {dt:.2f}s "
           f"({stats.generated_tokens / max(dt, 1e-9):.0f} tok/s), "
           f"occupancy {stats.mean_occupancy:.2f}, "
           f"{stats.slot_resets} slot resets")
+    if cfg.serving.paged:
+        table = sched.allocator.table
+        print(f"[serve] pool: peak {table.peak_in_use}/{table.usable_pages} "
+              f"pages ({sched.allocator.page_bytes()} B/page), "
+              f"{table.pages_in_use} in use after drain")
     print(f"[serve] static baseline: {static} decode steps "
           f"(continuous saves {100 * (1 - stats.decode_steps / static):.0f}%"
           f" on this trace)" if static else "[serve] static baseline: n/a")
@@ -95,6 +109,14 @@ def main(argv=None):
     ap.add_argument("--rate", type=float, default=2.0,
                     help="mean arrivals per decode step")
     ap.add_argument("--seed", type=int, default=0)
+    # paged KV cache (serving/paging.py)
+    ap.add_argument("--paged", action="store_true",
+                    help="page the KV cache: block tables over a shared "
+                         "pool, free-page admission")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="positions per KV page")
+    ap.add_argument("--pool-pages", type=int, default=0,
+                    help="shared pool size (0 = dense equivalent)")
     args = ap.parse_args(argv)
     workload = args.workload == "poisson"
     if args.batch is None:
@@ -126,6 +148,12 @@ def main(argv=None):
 
     getter = get_smoke_config if args.smoke else get_config
     cfg = getter(args.arch, mux_n=args.mux_n)
+    if args.paged:
+        import dataclasses
+        from repro.configs.base import ServingConfig
+        cfg = dataclasses.replace(cfg, serving=ServingConfig(
+            paged=True, page_size=args.page_size,
+            pool_pages=args.pool_pages))
     print(f"[serve] {cfg.name} N={cfg.mux.n} on mesh "
           f"{dict(zip(mesh.axis_names, mesh.devices.shape))}")
 

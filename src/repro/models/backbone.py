@@ -27,7 +27,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, MuxConfig
 from repro.core.strategies import get_demux, get_mux
-from repro.nn.attention import MLA, Attention, CrossAttention
+from repro.nn.attention import MLA, Attention, CrossAttention, paged_eligible
 from repro.nn.layers import Embedding, Linear, MLP, make_norm
 from repro.nn.moe import SINGLE, MeshInfo, MoE
 from repro.nn.ssm import MLSTM, Mamba, SLSTM
@@ -83,11 +83,13 @@ def _layer_init(key, cfg: ModelConfig, kind: dict):
 
 
 def _layer_cache(cfg: ModelConfig, kind: dict, batch: int, max_len: int,
-                 dtype):
+                 dtype, page_pool=None):
     mixer = kind["mixer"]
     if mixer == "attn":
-        return Attention.init_cache(cfg.attn_config(window=kind["window"]),
-                                    batch, max_len, dtype)
+        acfg = cfg.attn_config(window=kind["window"])
+        if page_pool is not None and paged_eligible(kind["window"], max_len):
+            return Attention.init_paged_cache(acfg, *page_pool, dtype)
+        return Attention.init_cache(acfg, batch, max_len, dtype)
     if mixer == "mla":
         return MLA.init_cache(cfg.mla, batch, max_len, dtype)
     if mixer == "mamba":
@@ -101,7 +103,7 @@ def _layer_cache(cfg: ModelConfig, kind: dict, batch: int, max_len: int,
 
 def _layer_apply(p, x, cfg: ModelConfig, kind: dict, *, positions,
                  cache=None, cache_index=None, cross_kv=None,
-                 mesh=None, mesh_info: MeshInfo = SINGLE):
+                 block_table=None, mesh=None, mesh_info: MeshInfo = SINGLE):
     norm = make_norm(cfg.norm)
     mixer = kind["mixer"]
     aux = jnp.zeros((), jnp.float32)
@@ -110,7 +112,8 @@ def _layer_apply(p, x, cfg: ModelConfig, kind: dict, *, positions,
     if mixer == "attn":
         out, new_cache = Attention.apply(
             p["attn"], h, cfg.attn_config(window=kind["window"]),
-            positions=positions, cache=cache, cache_index=cache_index)
+            positions=positions, cache=cache, cache_index=cache_index,
+            block_table=block_table)
     elif mixer == "mla":
         out, new_cache = MLA.apply(p["attn"], h, cfg.mla, positions=positions,
                                    cache=cache, cache_index=cache_index)
@@ -207,20 +210,28 @@ class Backbone:
 
     @staticmethod
     def init_cache(cfg: ModelConfig, batch: int, max_len: int,
-                   dtype=None) -> Params:
+                   dtype=None, *, page_pool=None) -> Params:
+        """``page_pool``: optional (pool_pages, page_size) — eligible
+        full-attention layers get pooled paged K/V (see
+        ``serving/paging.py``) instead of per-slot contiguous regions.
+        Windowed ring buffers, MLA latents, and SSM states stay contiguous
+        either way."""
         dtype = dtype or cfg.compute_dtype
         kinds = cfg.layer_kinds()
         head, period, groups = cfg.layer_pattern()
         cache: dict = {
-            "head": [_layer_cache(cfg, kinds[i], batch, max_len, dtype)
+            "head": [_layer_cache(cfg, kinds[i], batch, max_len, dtype,
+                                  page_pool)
                      for i in range(head)],
             "blocks": [
                 jax.tree.map(
                     lambda a: jnp.broadcast_to(a, (groups,) + a.shape).copy()
                     if hasattr(a, "shape") else a,
-                    _layer_cache(cfg, kinds[head + j], batch, max_len, dtype))
+                    _layer_cache(cfg, kinds[head + j], batch, max_len, dtype,
+                                 page_pool))
                 for j in range(period if groups else 0)],
-            "tail": [_layer_cache(cfg, kinds[i], batch, max_len, dtype)
+            "tail": [_layer_cache(cfg, kinds[i], batch, max_len, dtype,
+                                  page_pool)
                      for i in range(head + period * groups, cfg.n_layers)],
         }
         return cache
@@ -269,8 +280,8 @@ class Backbone:
 
     @staticmethod
     def _run_blocks(params, x, cfg: ModelConfig, *, positions, cache=None,
-                    cache_index=None, cross_kv=None, mesh=None,
-                    mesh_info: MeshInfo = SINGLE):
+                    cache_index=None, cross_kv=None, block_table=None,
+                    mesh=None, mesh_info: MeshInfo = SINGLE):
         kinds = cfg.layer_kinds()
         head, period, groups = cfg.layer_pattern()
         aux_total = jnp.zeros((), jnp.float32)
@@ -287,8 +298,8 @@ class Backbone:
         def run_one(lp, x, kind, lcache, ckv):
             x, nc, aux = _layer_apply(lp, x, cfg, kind, positions=positions,
                                       cache=lcache, cache_index=cache_index,
-                                      cross_kv=ckv, mesh=mesh,
-                                      mesh_info=mesh_info)
+                                      cross_kv=ckv, block_table=block_table,
+                                      mesh=mesh, mesh_info=mesh_info)
             if sp_spec is not None:
                 x = _constrain(x, mesh, sp_spec)
             return x, nc, aux
@@ -445,7 +456,8 @@ class Backbone:
     @staticmethod
     def decode_step(params, tokens, cache, cache_index, cfg: ModelConfig, *,
                     index_embeds=None, cross_kv=None, lane_mask=None,
-                    mesh=None, mesh_info: MeshInfo = SINGLE):
+                    block_table=None, mesh=None,
+                    mesh_info: MeshInfo = SINGLE):
         """One decode step.
 
         tokens: (B, N) last generated token per stream when mux active,
@@ -456,6 +468,9 @@ class Backbone:
         contribute nothing to the mixed stream (φ^i(0) = 0 for the linear
         strategies) and their logits are zeroed, so a freed lane neither
         pollutes the superposition nor leaks stale predictions.
+        block_table: (B, max_pages) int32 when the cache is paged
+        (``serving/paging.py``): maps each slot's page index to a pool page
+        for the paged attention layers' writes and gathers.
         Returns (logits, new_cache): logits (B, N, vocab) when mux active
         else (B, vocab).
         """
@@ -478,8 +493,8 @@ class Backbone:
             ci[:, None] if ci.ndim else ci, (b, 1))
         h, new_cache, _ = Backbone._run_blocks(
             params, x, cfg, positions=positions, cache=cache,
-            cache_index=ci, cross_kv=cross_kv, mesh=mesh,
-            mesh_info=mesh_info)
+            cache_index=ci, cross_kv=cross_kv, block_table=block_table,
+            mesh=mesh, mesh_info=mesh_info)
 
         if mux.active:
             demuxed = get_demux(mux.demux).apply(

@@ -34,12 +34,21 @@ class AttnConfig:
     causal: bool = True
     window: Optional[int] = None  # sliding-window size; None = full attention
     use_flash: bool = False  # route prefill through the Pallas flash kernel
+    paged_kernel: bool = False  # paged decode: Pallas gather kernel vs jnp ref
     softmax_scale: Optional[float] = None
 
     @property
     def scale(self) -> float:
         return self.softmax_scale if self.softmax_scale is not None \
             else self.head_dim ** -0.5
+
+
+def paged_eligible(window: Optional[int], max_len: int) -> bool:
+    """Whether an attention layer's decode cache is paged under
+    ``cfg.serving.paged``.  Windowed layers whose ring buffer is already
+    smaller than ``max_len`` keep the bounded contiguous ring — paging them
+    gains nothing and would break the ``pos % slots`` layout."""
+    return window is None or window >= max_len
 
 
 # ---------------------------------------------------------------------------
@@ -201,8 +210,24 @@ class Attention:
         }
 
     @staticmethod
+    def init_paged_cache(cfg: AttnConfig, pool_pages: int, page_size: int,
+                         dtype=jnp.bfloat16):
+        """Pooled K/V for paged decode: ``pool_pages`` pages of ``page_size``
+        positions, shared by every backbone slot through a per-slot block
+        table (which lives in the ``PagedKVSlotAllocator``, not here — it is
+        identical across layers).  ``pos`` mirrors the contiguous cache's
+        written-position array per page; -1 = unwritten.  Page 0 is the
+        allocator's trash page (writes from empty slots land there)."""
+        shape = (pool_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
+        return {
+            "k_pages": jnp.zeros(shape, dtype),
+            "v_pages": jnp.zeros(shape, dtype),
+            "pos": jnp.full((pool_pages, page_size), -1, jnp.int32),
+        }
+
+    @staticmethod
     def apply(params, x, cfg: AttnConfig, *, positions, cache=None,
-              cache_index=None):
+              cache_index=None, block_table=None):
         """x: (B, L, D). Returns (out, new_cache).
 
         Full-sequence mode (cache None): causal/window mask over x itself.
@@ -210,6 +235,9 @@ class Attention:
         (all batch rows at the same position: the classic lock-step engine)
         or a (B,) int32 vector (continuous batching: each backbone slot at
         its own position, so slots can be admitted/retired independently).
+        Paged decode (cache holds ``k_pages``): ``block_table`` (B, max_pages)
+        maps each slot's page index to a pool page; writes and the attention
+        gather go through the table.
         """
         b, l, _ = x.shape
         q = Linear.apply(params["wq"], x).reshape(b, l, cfg.n_heads, cfg.head_dim)
@@ -283,6 +311,36 @@ class Attention:
                                             _repeat_kv(v, n_rep), mask,
                                             cfg.scale)
             new_cache = None
+        elif "k_pages" in cache:
+            # Paged decode: ``cache_index`` -> (page, offset) through the
+            # block table; the attention gather reassembles each slot's pages
+            # in position order, so the result is bit-for-bit identical to
+            # the contiguous per-slot cache (stale pool entries are masked by
+            # their pos sentinel exactly like unwritten contiguous slots).
+            assert block_table is not None, "paged cache needs a block_table"
+            ps = cache["pos"].shape[1]
+            ci_v = jnp.broadcast_to(jnp.asarray(cache_index, jnp.int32), (b,))
+            rows = jnp.arange(b)
+            page_idx = jnp.clip(ci_v // ps, 0, block_table.shape[1] - 1)
+            # Slots with no mapped page (emptied and recycled, masked out by
+            # lane_mask upstream) write to the reserved trash page 0, which
+            # no block table ever references.
+            page_ids = jnp.maximum(block_table[rows, page_idx], 0)
+            off = ci_v % ps
+            pos_q = jnp.broadcast_to(positions, (b, 1))
+            k_pages = cache["k_pages"].at[page_ids, off].set(
+                k[:, 0].astype(cache["k_pages"].dtype))
+            v_pages = cache["v_pages"].at[page_ids, off].set(
+                v[:, 0].astype(cache["v_pages"].dtype))
+            pos_pages = cache["pos"].at[page_ids, off].set(
+                pos_q[:, 0].astype(jnp.int32))
+            new_cache = {"k_pages": k_pages, "v_pages": v_pages,
+                         "pos": pos_pages}
+            from repro.kernels.paged_attention import ops as paged_ops
+            out = paged_ops.paged_attention(
+                q, k_pages, v_pages, pos_pages, block_table, pos_q,
+                scale=cfg.scale, causal=cfg.causal, window=cfg.window,
+                use_kernel=cfg.paged_kernel)
         else:
             slots = cache["k"].shape[1]
             ci = jnp.asarray(cache_index, jnp.int32)

@@ -1,6 +1,8 @@
 from repro.serving.engine import Engine, ServeState
 from repro.serving.kvcache import (KVSlotAllocator, cache_bytes,
-                                   cache_bytes_per_stream, pytree_bytes)
+                                   cache_bytes_per_stream, paged_cache_bytes,
+                                   paged_cache_bytes_per_stream, pytree_bytes)
+from repro.serving.paging import (PagedKVSlotAllocator, PageTable, pages_for)
 from repro.serving.scheduler import (ContinuousScheduler, Request,
                                      SchedulerStats, poisson_trace,
                                      static_batch_steps)
@@ -9,7 +11,8 @@ from repro.serving.slots import SlotTable
 __all__ = [
     "Engine", "ServeState",
     "KVSlotAllocator", "cache_bytes", "cache_bytes_per_stream",
-    "pytree_bytes",
+    "paged_cache_bytes", "paged_cache_bytes_per_stream", "pytree_bytes",
+    "PagedKVSlotAllocator", "PageTable", "pages_for",
     "ContinuousScheduler", "Request", "SchedulerStats", "poisson_trace",
     "static_batch_steps",
     "SlotTable",

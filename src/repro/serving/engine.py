@@ -102,11 +102,12 @@ class Engine:
         return out["cache"], out["index_embeds"]
 
     def _step_impl(self, params, tokens, cache, pos, index_embeds, cross_kv,
-                   lane_mask):
+                   lane_mask, block_table):
         return Backbone.decode_step(
             params, tokens, cache, pos, self.cfg,
             index_embeds=index_embeds, cross_kv=cross_kv,
-            lane_mask=lane_mask, mesh=self.mesh, mesh_info=self.mesh_info)
+            lane_mask=lane_mask, block_table=block_table, mesh=self.mesh,
+            mesh_info=self.mesh_info)
 
     # -- public API -----------------------------------------------------------------
 
@@ -146,18 +147,19 @@ class Engine:
         return ServeState(cache=cache, pos=pos, index_embeds=index_embeds,
                           cross_kv=cross_kv)
 
-    def step(self, state: ServeState, tokens,
-             lane_mask=None) -> tuple[jnp.ndarray, ServeState]:
+    def step(self, state: ServeState, tokens, lane_mask=None,
+             block_table=None) -> tuple[jnp.ndarray, ServeState]:
         """One decode step.  ``state.pos`` may be scalar (lock-step) or (B,)
         (continuous); ``lane_mask`` (B, N) masks retired lanes out of the
-        mixed stream and the logits.  ``state.cache`` is donated — use the
-        returned state from here on."""
+        mixed stream and the logits; ``block_table`` (B, max_pages) routes
+        paged-cache writes/gathers (``serving/paging.py``).  ``state.cache``
+        is donated — use the returned state from here on."""
         if lane_mask is not None:
             lane_mask = jnp.asarray(lane_mask)
         logits, cache = self._step(self.params, jnp.asarray(tokens),
                                    state.cache, state.pos,
                                    state.index_embeds, state.cross_kv,
-                                   lane_mask)
+                                   lane_mask, block_table)
         return logits, dataclasses.replace(state, cache=cache,
                                            pos=state.pos + 1)
 

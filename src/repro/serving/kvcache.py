@@ -33,41 +33,85 @@ def _dtype_bytes(dtype_str: str) -> int:
     return jnp.dtype(dtype_str).itemsize
 
 
+def _contiguous_layer_bytes(cfg: ModelConfig, kind: dict, batch: int,
+                            seq_len: int) -> int:
+    """Per-layer bytes of the contiguous (per-slot) decode cache."""
+    by = _dtype_bytes(cfg.dtype)
+    mixer = kind["mixer"]
+    if mixer == "attn":
+        slots = min(kind["window"], seq_len) if kind["window"] else seq_len
+        return batch * slots * (cfg.n_kv_heads * cfg.head_dim_ * 2 * by + 4)
+    if mixer == "mla":
+        m = cfg.mla
+        return batch * seq_len * (m.cache_width * by + 4)
+    if mixer == "mamba":
+        c = cfg.mamba
+        return (batch * c.d_inner * c.d_state * 4          # fp32 state
+                + batch * (c.d_conv - 1) * c.d_inner * by)
+    if mixer == "mlstm":
+        c = cfg.xlstm
+        return batch * c.n_heads * (c.head_dim ** 2 + c.head_dim + 1) * 4
+    if mixer == "slstm":
+        return batch * 4 * cfg.d_model * 4
+    raise ValueError(mixer)
+
+
+def _cross_kv_bytes(cfg: ModelConfig, batch: int) -> int:
+    if not cfg.context_len:
+        return 0
+    by = _dtype_bytes(cfg.dtype)
+    n_cross = sum(1 for k in cfg.layer_kinds() if k["cross"])
+    return (batch * cfg.context_len * cfg.n_kv_heads * cfg.head_dim_
+            * 2 * by * n_cross)
+
+
 def cache_bytes(cfg: ModelConfig, batch: int, seq_len: int) -> int:
     """Total decode-cache bytes for ``batch`` backbone streams."""
+    total = sum(_contiguous_layer_bytes(cfg, kind, batch, seq_len)
+                for kind in cfg.layer_kinds())
+    return total + _cross_kv_bytes(cfg, batch)
+
+
+def paged_cache_bytes(cfg: ModelConfig, batch: int, max_len: int, *,
+                      pool_pages: int, page_size: int) -> int:
+    """Bytes of the *paged* decode cache (``serving/paging.py``): eligible
+    full-attention layers hold a shared ``pool_pages``-page pool (including
+    the reserved trash page); windowed rings, MLA latents, and SSM states
+    stay contiguous per slot.  Pinned to the allocator's actual pytree in
+    ``tests/test_kvcache.py``.
+
+    Pass the allocator's ``table.pages_in_use + 1`` as ``pool_pages`` to
+    account pages actually allocated instead of ``batch * max_len``."""
+    from repro.nn.attention import paged_eligible
     by = _dtype_bytes(cfg.dtype)
     total = 0
     for kind in cfg.layer_kinds():
-        mixer = kind["mixer"]
-        if mixer == "attn":
-            slots = min(kind["window"], seq_len) if kind["window"] else seq_len
-            total += batch * slots * cfg.n_kv_heads * cfg.head_dim_ * 2 * by
-            total += batch * slots * 4  # pos int32
-        elif mixer == "mla":
-            m = cfg.mla
-            total += batch * seq_len * m.cache_width * by
-            total += batch * seq_len * 4
-        elif mixer == "mamba":
-            c = cfg.mamba
-            total += batch * c.d_inner * c.d_state * 4          # fp32 state
-            total += batch * (c.d_conv - 1) * c.d_inner * by
-        elif mixer == "mlstm":
-            c = cfg.xlstm
-            total += batch * c.n_heads * (c.head_dim ** 2 + c.head_dim + 1) * 4
-        elif mixer == "slstm":
-            total += batch * 4 * cfg.d_model * 4
-    if cfg.context_len:
-        # cross-attn K/V per cross layer
-        n_cross = sum(1 for k in cfg.layer_kinds() if k["cross"])
-        total += (batch * cfg.context_len * cfg.n_kv_heads * cfg.head_dim_
-                  * 2 * by * n_cross)
-    return total
+        if kind["mixer"] == "attn" and paged_eligible(kind["window"],
+                                                      max_len):
+            total += pool_pages * page_size * (
+                cfg.n_kv_heads * cfg.head_dim_ * 2 * by + 4)
+        else:
+            total += _contiguous_layer_bytes(cfg, kind, batch, max_len)
+    return total + _cross_kv_bytes(cfg, batch)
 
 
 def cache_bytes_per_stream(cfg: ModelConfig, seq_len: int) -> float:
     """Bytes per user stream — divided by mux.n when multiplexing shares the
     cache (the beyond-paper serving result)."""
     per_slot = cache_bytes(cfg, 1, seq_len + cfg.mux.prefix_len)
+    return per_slot / max(1, cfg.mux.n)
+
+
+def paged_cache_bytes_per_stream(cfg: ModelConfig, seq_len: int, *,
+                                 page_size: int) -> float:
+    """Paged analogue of ``cache_bytes_per_stream``: one slot's bytes are
+    the pages its live tokens actually occupy (``ceil(L / page_size)``
+    pages, no trash-page share), not a ``max_len`` reservation — divided by
+    mux.n streams sharing the slot."""
+    total = seq_len + cfg.mux.prefix_len
+    pages = -(-total // page_size)
+    per_slot = paged_cache_bytes(cfg, 1, total, pool_pages=pages,
+                                 page_size=page_size)
     return per_slot / max(1, cfg.mux.n)
 
 

@@ -5,19 +5,36 @@ request must arrive together, run the same number of steps, and finish
 together — one long generation holds B·N−1 streams hostage.  This module
 adds stream-level granularity on top of the same jitted decode step:
 
-  * requests queue up with their own arrival time, prompt, and length budget
-    (``Request``; ``poisson_trace`` replays a Poisson arrival process);
+  * requests queue up with their own arrival time, prompt, length budget,
+    and sampling parameters (``Request``; ``poisson_trace`` replays a
+    Poisson arrival process);
   * a ``SlotTable`` maps B backbone slots × N mux lanes to live request ids;
-  * admission fills free lanes; a freshly admitted request's prompt *ramps*
-    through the decode path one token per step, muxed alongside the slot's
-    other lanes which keep decoding undisturbed — a slot is re-muxed with
-    fresh prompts without re-prefilling its live lanes;
+  * admission fills free lanes — FIFO by default, or highest
+    ``Request.priority`` first under ``policy="priority"``; a freshly
+    admitted request's prompt *ramps* through the decode path one token per
+    step, muxed alongside the slot's other lanes which keep decoding
+    undisturbed — a slot is re-muxed with fresh prompts without
+    re-prefilling its live lanes;
   * retirement (EOS or length budget) frees a lane immediately: the lane is
     masked out of the mixed stream and its logits zeroed (``lane_mask``)
     while the slot's remaining lanes continue;
-  * when a slot's lanes have all retired, the ``KVSlotAllocator`` rewinds
-    just that slot to the prefix-primed cache (one jitted masked ``where``,
-    no re-trace) and its position rewinds to ``prefix_len``.
+  * when a slot's lanes have all retired, the allocator rewinds just that
+    slot to the prefix-primed cache and its position rewinds to
+    ``prefix_len``.
+
+Cache layout is pluggable (``cfg.serving.paged``):
+
+  * contiguous (default): ``KVSlotAllocator`` — each slot owns a private
+    ``max_len`` region; admission refuses a request that would overflow a
+    deep slot (the lane is retried later), and recycling is one jitted
+    masked ``where``;
+  * paged: ``PagedKVSlotAllocator`` — slots hold block tables over a shared
+    page pool, position space allocates on demand, and admission checks
+    *free pages* instead of slot depth: the scheduler keeps a per-lane end
+    horizon and admits whenever every slot's worst-case footprint still
+    fits the pool, so a long-running slot never blocks admission.  Drained
+    slots are recycled eagerly (free-on-retire) to return pages as soon as
+    possible.
 
 Per-slot positions (the ``(B,)`` ``pos`` vector threaded through
 ``Backbone.decode_step``) are what make the slots independent: slot 0 can be
@@ -35,12 +52,14 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Optional
+import heapq
+from typing import Any, Optional
 
 import numpy as np
 
 from repro.serving.engine import Engine, ServeState
 from repro.serving.kvcache import KVSlotAllocator
+from repro.serving.paging import PagedKVSlotAllocator, pages_for
 from repro.serving.slots import SlotTable
 
 
@@ -51,11 +70,15 @@ class Request:
     max_new_tokens: int
     eos_id: Optional[int] = None
     arrival: int = 0              # scheduler-clock step of arrival
+    temperature: float = 0.0      # 0 = greedy (bit-for-bit default path)
+    seed: Optional[int] = None    # per-request sampling seed (default: rid)
+    priority: int = 0             # higher admits first under policy="priority"
     # runtime state (owned by the scheduler)
     admitted_step: int = -1
     finished_step: int = -1
     output: list = dataclasses.field(default_factory=list)
     fed: int = 0                  # prompt tokens consumed so far (ramp cursor)
+    rng: Any = None               # lazily built per-request sampler
 
     @property
     def ramping(self) -> bool:
@@ -64,6 +87,12 @@ class Request:
     @property
     def done(self) -> bool:
         return self.finished_step >= 0
+
+    def fresh(self) -> "Request":
+        """Copy with runtime state reset, so a trace can be replayed by
+        several engines/schedulers."""
+        return dataclasses.replace(self, output=[], fed=0, admitted_step=-1,
+                                   finished_step=-1, rng=None)
 
 
 def poisson_trace(n_requests: int, *, rate: float, prompt_len: int,
@@ -118,6 +147,7 @@ class SchedulerStats:
     generated_tokens: int = 0
     occupancy_sum: float = 0.0          # Σ per-step lane occupancy
     slot_active_steps: Optional[np.ndarray] = None  # (B,) useful-work steps
+    peak_pages: int = 0                 # paged mode: pool high-water mark
 
     @property
     def mean_occupancy(self) -> float:
@@ -128,39 +158,120 @@ class ContinuousScheduler:
     """Continuous batching over an ``Engine``: stream-level admission and
     retirement on a B-slot × N-lane grid sharing one jitted decode step."""
 
-    def __init__(self, engine: Engine):
+    def __init__(self, engine: Engine, *, policy: str = "fifo"):
+        if policy not in ("fifo", "priority"):
+            raise ValueError(f"unknown admission policy {policy!r}")
         self.engine = engine
+        self.policy = policy
         cfg = engine.cfg
         self.n_slots = engine.batch
         self.n_lanes = cfg.mux.n if cfg.mux.active else 1
         self.prefix_len = cfg.mux.prefix_len
+        self.paged = cfg.serving.paged
 
         primed = engine.prime()
-        self.allocator = KVSlotAllocator(
-            cfg, self.n_slots, engine.max_len, template=primed.cache)
+        if self.paged:
+            self.allocator = PagedKVSlotAllocator(
+                cfg, self.n_slots, engine.max_len, template=primed.cache)
+        else:
+            self.allocator = KVSlotAllocator(
+                cfg, self.n_slots, engine.max_len, template=primed.cache)
         self.index_embeds = primed.index_embeds
         self.cross_kv = primed.cross_kv
 
         self.table = SlotTable(self.n_slots, self.n_lanes)
         self.pos = np.full(self.n_slots, self.prefix_len, np.int32)
+        # Per-lane end-position horizon (exclusive; -1 = free lane): the
+        # paged admission check sizes every slot's worst-case footprint in
+        # pages against the pool.
+        self.lane_end = np.full((self.n_slots, self.n_lanes), -1, np.int64)
         self.queue: collections.deque[Request] = collections.deque()
+        self._ready: list[tuple] = []    # priority heap of arrived requests
         self.requests: dict[int, Request] = {}
         self.finished: list[Request] = []
         self.t = 0                       # scheduler clock (steps)
         self.stats = SchedulerStats(
             slot_active_steps=np.zeros(self.n_slots, np.int64))
 
-    # -- admission ------------------------------------------------------------
+    # -- queue (fifo deque / priority heap over arrived requests) ---------------
 
     def submit(self, req: Request) -> None:
         need = self.prefix_len + len(req.prompt) + req.max_new_tokens
         if need > self.engine.max_len:
+            hint = ("raise Engine max_len — under paging the table width is "
+                    "cheap, memory is pooled per page"
+                    if self.paged else
+                    "raise Engine max_len or clip the trace (paged "
+                    "attention — cfg.serving.paged — is the real fix)")
             raise ValueError(
                 f"request {req.rid} needs {need} positions but the cache "
-                f"holds {self.engine.max_len}; raise Engine max_len or clip "
-                f"the trace (paged attention is the real fix — ROADMAP)")
+                f"holds {self.engine.max_len}; {hint}")
+        if self.paged:
+            # A request that cannot fit even with every other slot drained
+            # to its prefix pages would starve in the queue forever.
+            alloc = self.allocator
+            floor = ((self.n_slots - 1) * alloc.n_prefix_pages
+                     + pages_for(need, alloc.page_size))
+            if floor > alloc.table.usable_pages:
+                raise ValueError(
+                    f"request {req.rid} needs {pages_for(need, alloc.page_size)} "
+                    f"pages but the pool can never free more than "
+                    f"{alloc.table.usable_pages - (self.n_slots - 1) * alloc.n_prefix_pages}"
+                    f"; raise serving.pool_pages")
         self.requests[req.rid] = req
         self.queue.append(req)
+
+    def _pull_arrived(self) -> None:
+        """Priority mode: move arrived requests from the arrival-ordered
+        queue into the ready heap (highest priority, then FIFO)."""
+        while self.queue and self.queue[0].arrival <= self.t:
+            req = self.queue.popleft()
+            heapq.heappush(self._ready,
+                           (-req.priority, req.arrival, req.rid, req))
+
+    def _peek(self) -> Optional[Request]:
+        """Next admittable request, or None.  FIFO preserves strict
+        head-of-line order; priority picks the best *arrived* request."""
+        if self.policy == "priority":
+            self._pull_arrived()
+            return self._ready[0][3] if self._ready else None
+        if self.queue and self.queue[0].arrival <= self.t:
+            return self.queue[0]
+        return None
+
+    def _pop(self) -> Request:
+        if self.policy == "priority":
+            return heapq.heappop(self._ready)[3]
+        return self.queue.popleft()
+
+    def _waiting(self) -> int:
+        return len(self.queue) + len(self._ready)
+
+    def _next_arrival(self) -> Optional[int]:
+        if self._ready:
+            return self.t
+        return self.queue[0].arrival if self.queue else None
+
+    # -- admission ------------------------------------------------------------
+
+    def _fits_pages(self, slot: int, end: int, fresh: set) -> bool:
+        """Paged admission: would every slot's worst-case footprint still
+        fit the pool if this request (ending at ``end``) joined ``slot``?
+        Slots recycled this round (``fresh``) count their prefix pages only.
+        Conservative — no preemption needed mid-decode."""
+        alloc = self.allocator
+        total = 0
+        for s in range(self.n_slots):
+            allocated = alloc.n_prefix_pages if s in fresh \
+                else int(alloc.table.n_allocated[s])
+            horizon = int(self.lane_end[s].max())
+            if s == slot:
+                horizon = max(horizon, end)
+            need = allocated
+            if horizon > 0:
+                need = max(need, pages_for(horizon, alloc.page_size))
+            total += need
+        return total <= alloc.table.usable_pages
 
     def _admit(self) -> None:
         """Fill free lanes from the queue (arrived requests only).  Empty
@@ -168,24 +279,32 @@ class ContinuousScheduler:
         one batched cache reset before re-occupying."""
         to_reset = np.zeros(self.n_slots, bool)
         target: dict[int, int] = {}      # slot -> admission position
+        fresh: set[int] = set()          # slots recycled this round
         n_planned = 0
         for (s, l) in self.table.free_lanes():
-            if not self.queue or self.queue[0].arrival > self.t:
+            req = self._peek()
+            if req is None:
                 break
             if s not in target:
                 # First admission into this slot this round: an empty slot
                 # rewinds to the primed prefix; a live slot admits in-stream
                 # at its current position (the prompt ramps during decode).
-                target[s] = self.prefix_len if self.table.slot_empty(s) \
-                    else int(self.pos[s])
+                if self.table.slot_empty(s):
+                    target[s] = self.prefix_len
+                    fresh.add(s)
+                else:
+                    target[s] = int(self.pos[s])
             pos = target[s]
-            req = self.queue[0]
-            if pos + len(req.prompt) + req.max_new_tokens > self.engine.max_len:
+            end = pos + len(req.prompt) + req.max_new_tokens
+            if end > self.engine.max_len:
                 continue  # slot too deep for this request; try another lane
-            self.queue.popleft()
+            if self.paged and not self._fits_pages(s, end, fresh):
+                continue  # pool too full for this slot; try another lane
+            self._pop()
             if pos != int(self.pos[s]):
                 to_reset[s] = True
             self.table.occupy(s, l, req.rid)
+            self.lane_end[s, l] = end
             req.admitted_step = self.t
             n_planned += 1
         if to_reset.any():
@@ -193,6 +312,21 @@ class ContinuousScheduler:
             self.pos[to_reset] = self.prefix_len
             self.stats.slot_resets += int(to_reset.sum())
         self.stats.admitted += n_planned
+
+    # -- sampling ---------------------------------------------------------------
+
+    def _sample(self, req: Request, logits: np.ndarray) -> int:
+        """Per-lane next token.  Zero temperature is the exact argmax the
+        greedy path always took (bit-for-bit identical); otherwise
+        Gumbel-max sampling from the request's own seeded generator, so
+        each lane of the mixed stream samples independently."""
+        if req.temperature > 0.0:
+            if req.rng is None:
+                seed = req.seed if req.seed is not None else req.rid
+                req.rng = np.random.default_rng(seed)
+            z = np.asarray(logits, np.float64) / req.temperature
+            return int(np.argmax(z + req.rng.gumbel(size=z.shape)))
+        return int(np.argmax(logits))
 
     # -- one decode step --------------------------------------------------------
 
@@ -211,18 +345,27 @@ class ContinuousScheduler:
                 tokens[s, l] = req.prompt[req.fed] if req.ramping \
                     else req.output[-1]
 
+        block_table = None
+        if self.paged:
+            # Map every live slot's write position to a page; empty slots
+            # write to the allocator's trash page.
+            self.allocator.ensure(self.pos, mask.sum(axis=1) > 0)
+            block_table = self.allocator.block_table
+
         state = ServeState(cache=self.allocator.cache, pos=self.pos.copy(),
                            index_embeds=self.index_embeds,
                            cross_kv=self.cross_kv)
         mux_active = self.engine.cfg.mux.active
         toks = tokens if mux_active else tokens[:, 0]
-        logits, state = self.engine.step(state, toks, lane_mask=mask)
+        logits, state = self.engine.step(state, toks, lane_mask=mask,
+                                         block_table=block_table)
         self.allocator.adopt(state.cache)
         self.pos += 1
         logits = np.asarray(logits)
         if not mux_active:
             logits = logits[:, None, :]                  # (B, 1, V)
 
+        released = set()
         for s in range(self.n_slots):
             for l in range(self.n_lanes):
                 rid = int(self.table.grid[s, l])
@@ -233,15 +376,29 @@ class ContinuousScheduler:
                     req.fed += 1
                     if req.ramping:      # prompt not fully consumed yet
                         continue
-                tok = int(np.argmax(logits[s, l]))
+                tok = self._sample(req, logits[s, l])
                 req.output.append(tok)
                 self.stats.generated_tokens += 1
                 if (len(req.output) >= req.max_new_tokens or
                         (req.eos_id is not None and tok == req.eos_id)):
                     self.table.release(s, l)
+                    self.lane_end[s, l] = -1
+                    released.add(s)
                     req.finished_step = self.t
                     self.finished.append(req)
                     self.stats.finished += 1
+
+        if self.paged:
+            # Free-on-retire: recycle drained slots eagerly so their pages
+            # return to the pool now, not at the next admission into them.
+            drained = np.array([s in released and self.table.slot_empty(s)
+                                for s in range(self.n_slots)])
+            if drained.any():
+                self.allocator.reset_slots(drained)
+                self.pos[drained] = self.prefix_len
+                self.stats.slot_resets += int(drained.sum())
+            self.stats.peak_pages = max(self.stats.peak_pages,
+                                        self.allocator.table.peak_in_use)
 
         self.stats.decode_steps += 1
         self.stats.occupancy_sum += float(mask.mean())
@@ -257,11 +414,12 @@ class ContinuousScheduler:
         decode steps."""
         for r in (requests or []):
             self.submit(r)
-        while (self.queue or self.table.live_requests()) and \
+        while (self._waiting() or self.table.live_requests()) and \
                 self.stats.decode_steps < max_steps:
-            if not self.table.live_requests() and self.queue and \
-                    self.queue[0].arrival > self.t:
-                self.stats.idle_steps += self.queue[0].arrival - self.t
-                self.t = self.queue[0].arrival
+            nxt = self._next_arrival()
+            if not self.table.live_requests() and nxt is not None and \
+                    nxt > self.t:
+                self.stats.idle_steps += nxt - self.t
+                self.t = nxt
             self.step()
         return self.stats

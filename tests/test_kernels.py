@@ -7,6 +7,8 @@ import pytest
 from repro.kernels.attention import kernel as att_kernel, ref as att_ref
 from repro.kernels.demux import kernel as demux_kernel, ref as demux_ref
 from repro.kernels.multiplex import kernel as mux_kernel, ref as mux_ref
+from repro.kernels.paged_attention import (kernel as paged_kernel,
+                                           ref as paged_ref)
 from repro.nn.layers import SharedMLPStack
 
 TOLS = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
@@ -100,3 +102,89 @@ def test_flash_long_context_numerics(key):
     assert bool(jnp.isfinite(got).all())
     want = att_ref.flash_attention(q, q, q, causal=True)
     np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# paged-attention decode (gather-from-block-table)
+# ---------------------------------------------------------------------------
+
+def _paged_case(key, b, h, kvh, hd, pool, ps, mp, *, dtype, seed=0):
+    """Random pool + block tables: each slot maps a random number of
+    distinct non-trash pages, each page written up to a random length."""
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, 1, h, hd)).astype(dtype)
+    k_pages = jax.random.normal(ks[1], (pool, ps, kvh, hd)).astype(dtype)
+    v_pages = jax.random.normal(ks[2], (pool, ps, kvh, hd)).astype(dtype)
+    rng = np.random.default_rng(seed)
+    bt = np.full((b, mp), -1, np.int32)
+    pos = np.full((pool, ps), -1, np.int32)
+    for i in range(b):
+        n = rng.integers(1, mp + 1)
+        bt[i, :n] = rng.choice(np.arange(1, pool), size=n, replace=False)
+        for j, p in enumerate(bt[i, :n]):
+            written = rng.integers(1, ps + 1)
+            pos[p, :written] = j * ps + np.arange(written)
+    q_pos = jnp.asarray(rng.integers(ps, mp * ps, (b, 1)), jnp.int32)
+    return q, k_pages, v_pages, jnp.asarray(pos), jnp.asarray(bt), q_pos
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,kvh,hd,pool,ps,mp", [
+    (2, 4, 2, 64, 9, 8, 4),     # GQA, multi-page
+    (1, 4, 4, 32, 5, 4, 3),     # MHA, small pages
+    (3, 8, 2, 16, 12, 16, 2),   # wide GQA group
+])
+@pytest.mark.parametrize("window", [None, 8])
+def test_paged_kernel_allclose(key, b, h, kvh, hd, pool, ps, mp, dtype,
+                               window):
+    args = _paged_case(key, b, h, kvh, hd, pool, ps, mp, dtype=dtype)
+    scale = hd ** -0.5
+    want = paged_ref.paged_attention(*args, scale=scale, causal=True,
+                                     window=window)
+    got = paged_kernel.paged_decode_attention(*args, scale=scale, causal=True,
+                                              window=window, interpret=True)
+    assert got.shape == want.shape and got.dtype == want.dtype
+    np.testing.assert_allclose(got.astype(np.float32),
+                               want.astype(np.float32), **_tol(dtype))
+
+
+def test_paged_ref_matches_contiguous_attention(key):
+    """A pool that mirrors a contiguous cache (page j of slot b holds
+    positions [j*ps, (j+1)*ps)) reproduces plain masked attention over that
+    cache bit-for-bit — the invariant the serving parity tests lean on."""
+    b, h, hd, ps, mp = 2, 4, 32, 8, 3
+    S = mp * ps
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, 1, h, hd))
+    k = jax.random.normal(ks[1], (b, S, h, hd))
+    v = jax.random.normal(ks[2], (b, S, h, hd))
+    written = 13                                   # positions 0..12 valid
+    pos_c = np.where(np.arange(S) < written, np.arange(S), -1)
+    pos_c = np.broadcast_to(pos_c, (b, S)).astype(np.int32)
+
+    # dense contiguous oracle (the nn.attention decode expressions)
+    q_pos = jnp.full((b, 1), written - 1, jnp.int32)
+    diff = q_pos[:, :, None] - pos_c[:, None, :]
+    mask = (diff >= 0) & (pos_c >= 0)[:, None, :]
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) \
+        * hd ** -0.5
+    logits = jnp.where(mask[:, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    want = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+    # identical data laid out as pages: page j of slot i at pool row
+    # 1 + i*mp + j
+    pool = 1 + b * mp
+    bt = np.asarray([[1 + i * mp + j for j in range(mp)] for i in range(b)],
+                    np.int32)
+    k_pages = jnp.zeros((pool, ps, h, hd)).at[bt.reshape(-1)].set(
+        k.reshape(b * mp, ps, h, hd))
+    v_pages = jnp.zeros((pool, ps, h, hd)).at[bt.reshape(-1)].set(
+        v.reshape(b * mp, ps, h, hd))
+    pos_pages = jnp.full((pool, ps), -1, jnp.int32).at[bt.reshape(-1)].set(
+        jnp.asarray(pos_c.reshape(b * mp, ps)))
+
+    got = paged_ref.paged_attention(q, k_pages, v_pages, pos_pages,
+                                    jnp.asarray(bt), q_pos,
+                                    scale=hd ** -0.5, causal=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

@@ -12,12 +12,15 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.configs.base import ServingConfig
 from repro.configs.registry import get_smoke_config
 from repro.models import Backbone
 from repro.serving.engine import Engine
 from repro.serving.kvcache import (KVSlotAllocator, cache_bytes,
-                                   cache_bytes_per_stream, pytree_bytes,
+                                   cache_bytes_per_stream, paged_cache_bytes,
+                                   paged_cache_bytes_per_stream, pytree_bytes,
                                    reset_cache_slots)
+from repro.serving.paging import PagedKVSlotAllocator
 
 # attn (GQA), MLA latent, attn+Mamba hybrid (+MoE), mLSTM/sLSTM mix,
 # sliding-window/global mix — every mixer branch of the accounting.
@@ -52,6 +55,37 @@ def test_cache_bytes_per_stream_divides_by_n():
     base = dataclasses.replace(
         cfg, mux=dataclasses.replace(cfg.mux, n=1))
     assert cache_bytes_per_stream(cfg, 32) < cache_bytes_per_stream(base, 32)
+
+
+# attn (all layers paged), windowed/global mix (global layers paged, local
+# rings contiguous), attn+Mamba hybrid (SSM state contiguous).
+@pytest.mark.parametrize("arch", ["qwen1.5-4b", "gemma3-4b",
+                                  "jamba-1.5-large-398b"])
+def test_paged_cache_bytes_matches_pool_pytree(arch):
+    """The paged accounting equals the actual bytes of the allocator's
+    pooled cache pytree — pool pages for eligible attention layers,
+    contiguous terms for everything else."""
+    cfg = get_smoke_config(arch, mux_n=2)
+    cfg = dataclasses.replace(cfg, serving=ServingConfig(
+        paged=True, page_size=8, pool_pages=13))
+    B, L = 3, 24
+    alloc = PagedKVSlotAllocator(cfg, B, L)
+    assert paged_cache_bytes(cfg, B, L, pool_pages=13, page_size=8) == \
+        pytree_bytes(alloc.cache)
+
+
+def test_paged_bytes_track_live_tokens_not_max_len():
+    """Pages actually allocated, not batch * max_len: a short generation's
+    paged footprint is far below the contiguous reservation, and the
+    per-stream number scales with live length."""
+    cfg = get_smoke_config("qwen1.5-4b", mux_n=4)
+    contig = cache_bytes(cfg, 1, 256 + cfg.mux.prefix_len)
+    short = paged_cache_bytes(cfg, 1, 256 + cfg.mux.prefix_len,
+                              pool_pages=-(-16 // 8) + 1, page_size=8)
+    assert short < contig / 4
+    assert paged_cache_bytes_per_stream(cfg, 16, page_size=8) < \
+        paged_cache_bytes_per_stream(cfg, 160, page_size=8) < \
+        cache_bytes_per_stream(cfg, 256)
 
 
 # ---------------------------------------------------------------------------
