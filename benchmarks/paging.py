@@ -12,7 +12,10 @@ generation (the paged subsystem's raison d'être):
      paged run and a contiguous run on the clipped trace.
 
 Writes ``results/bench/serving_paged.json`` (the ``paging`` suite of
-``benchmarks.run``).
+``benchmarks.run``), plus a chunked-prefill comparison
+(``serving.prefill_chunk``) to ``results/bench/serving_chunked.json``:
+ramp latency — decode steps from admission to a request's first generated
+token — drops to ~ceil(Lp/chunk) while tokens-per-step throughput holds.
 """
 from __future__ import annotations
 
@@ -33,6 +36,14 @@ from repro.serving.scheduler import ContinuousScheduler, poisson_trace
 
 def _fresh(reqs):
     return [r.fresh() for r in reqs]
+
+
+def ramp_latency(sched) -> dict:
+    """Steps from admission to first generated token, over finished
+    requests — the stall chunked prefill exists to amortise."""
+    lat = [q.ramp_latency for q in sched.finished]
+    return {"mean": round(float(np.mean(lat)), 2), "max": int(max(lat)),
+            "p50": int(np.median(lat))} if lat else {}
 
 
 def run(*, n=4, batch=2, num_requests=16, rate=2.0, prompt_len=4,
@@ -102,6 +113,7 @@ def run(*, n=4, batch=2, num_requests=16, rate=2.0, prompt_len=4,
             "decode_steps": stats_c.decode_steps,
             "tok_per_s": round(stats_c.generated_tokens / dt_c, 1),
             "cache_bytes": contig_bytes,
+            "ramp_latency": ramp_latency(sched_c),
         },
         "paged": {
             "finished": stats_p.finished,
@@ -113,6 +125,7 @@ def run(*, n=4, batch=2, num_requests=16, rate=2.0, prompt_len=4,
             "peak_cache_bytes": peak_bytes,
             "slot_resets": stats_p.slot_resets,
             "mean_occupancy": round(stats_p.mean_occupancy, 3),
+            "ramp_latency": ramp_latency(sched_p),
         },
     }
     print(f"  contiguous: refuses the long tail; {stats_c.decode_steps} "
@@ -123,6 +136,39 @@ def run(*, n=4, batch=2, num_requests=16, rate=2.0, prompt_len=4,
           f"tok/s, peak {stats_p.peak_pages}/{table.usable_pages} pages "
           f"({peak_bytes} bytes at peak)")
     common.save("serving_paged", payload)
+
+    # Chunked prefill on the same paged setup: ramp latency amortises to
+    # ~ceil(Lp / chunk) steps while every request still completes.
+    common.banner("Serving — chunked prefill ramp (paged)")
+    chunked = {"config": dict(payload["config"]),
+               "unchunked": {"decode_steps": stats_p.decode_steps,
+                             "tok_per_s": payload["paged"]["tok_per_s"],
+                             "ramp_latency": ramp_latency(sched_p)}}
+    for chunk in (2, 4):
+        cfg_ck = dataclasses.replace(cfg, serving=ServingConfig(
+            paged=True, page_size=page_size, pool_pages=pool,
+            prefill_chunk=chunk))
+        sched_ck = ContinuousScheduler(
+            Engine(params, cfg_ck, batch=batch, max_len=max_len_paged))
+        t0 = time.time()
+        stats_ck = sched_ck.run(_fresh(long_trace))
+        dt_ck = time.time() - t0
+        assert stats_ck.finished == len(long_trace), \
+            f"chunked run finished {stats_ck.finished}/{len(long_trace)}"
+        lat = ramp_latency(sched_ck)
+        chunked[f"chunk_{chunk}"] = {
+            "decode_steps": stats_ck.decode_steps,
+            "tok_per_s": round(stats_ck.generated_tokens / dt_ck, 1),
+            "generated_tokens": stats_ck.generated_tokens,
+            "peak_pool_pages": stats_ck.peak_pages,
+            "ramp_latency": lat,
+        }
+        print(f"  chunk={chunk}: ramp {lat['mean']} steps mean "
+              f"(vs {chunked['unchunked']['ramp_latency']['mean']} "
+              f"unchunked), {stats_ck.decode_steps} decode steps, "
+              f"{chunked[f'chunk_{chunk}']['tok_per_s']} tok/s")
+    common.save("serving_chunked", chunked)
+    payload["chunked"] = chunked
     return payload
 
 

@@ -99,12 +99,21 @@ class ServingConfig:
                               # (batch * ceil(max_len / page_size) + 1)
     use_kernel: bool = False  # route paged decode attention through the
                               # Pallas gather kernel instead of the jnp ref
+    prefill_chunk: int = 1    # prompt-ramp tokens per decode step: an
+                              # admitted prompt consumes ~Lp/chunk steps
+                              # instead of Lp (the slot's non-ramping lanes
+                              # decode one token per step, their extra chunk
+                              # rows masked).  1 = today's one-token ramp,
+                              # bit-for-bit unchanged.
 
     def __post_init__(self):
         if self.page_size < 1:
             raise ValueError(f"page_size must be >= 1, got {self.page_size}")
         if self.pool_pages < 0:
             raise ValueError(f"pool_pages must be >= 0, got {self.pool_pages}")
+        if self.prefill_chunk < 1:
+            raise ValueError(
+                f"prefill_chunk must be >= 1, got {self.prefill_chunk}")
 
 
 # ---------------------------------------------------------------------------

@@ -1,24 +1,26 @@
 """Paged-attention decode as a Pallas TPU kernel (serving hot spot).
 
-One query token per backbone slot attends over that slot's KV pages,
-gathered from the shared pool through a scalar-prefetched block table:
+A C-row query block per backbone slot (C == 1 for plain decode, C > 1 for
+chunked prefill) attends over that slot's KV pages, gathered from the
+shared pool through a scalar-prefetched block table:
 
   grid (B, KVH, max_pages) — the page axis is the last (fastest) grid dim;
-  the block table and query positions ride in SMEM via
-  ``PrefetchScalarGridSpec`` so the K/V/pos BlockSpec index maps can turn a
-  (slot, page-index) grid point into a pool-page DMA before the body runs —
-  the kernel never materialises the gathered (B, S, H, hd) view the jnp
-  reference builds.
+  the block table rides in SMEM via ``PrefetchScalarGridSpec`` so the
+  K/V/pos BlockSpec index maps can turn a (slot, page-index) grid point
+  into a pool-page DMA before the body runs — the kernel never materialises
+  the gathered (B, S, H, hd) view the jnp reference builds.  Per-row query
+  positions are a regular VMEM input (they gate masking, not DMA).
 
-Per-program blocks are (n_rep, hd) queries (the GQA group sharing one KV
-head) against one (ps, hd) page, with the canonical online-softmax scratch
-(f32 accumulator + running max / normaliser) flushed on the final page.
-VMEM claim is O(n_rep·hd + ps·hd) — independent of both the pool size and
-the slot's live length.  Unmapped pages (block-table entry -1) are clamped
-to pool page 0 for the DMA and masked wholesale in the body, so the
-streamed bytes are garbage but the contribution is an exact zero.
+Per-program blocks are (C, n_rep, hd) queries (the GQA group sharing one KV
+head, per chunk row) against one (ps, hd) page, with the canonical
+online-softmax scratch (f32 accumulator + running max / normaliser)
+flushed on the final page.  VMEM claim is O(C·n_rep·hd + ps·hd) —
+independent of both the pool size and the slot's live length.  Unmapped
+pages (block-table entry -1) are clamped to pool page 0 for the DMA and
+masked wholesale in the body, so the streamed bytes are garbage but the
+contribution is an exact zero.
 
-Decode tiles are small (n_rep × ps); on a real TPU the MXU wants
+Decode tiles are small (C·n_rep × ps); on a real TPU the MXU wants
 page_size >= 128 or multi-page K blocks — noted on the roadmap.  Tests run
 interpret mode; numerics match the jnp reference either way.
 """
@@ -46,28 +48,30 @@ def _paged_kernel(bt_ref, qp_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
         l_ref[...] = jnp.zeros(l_ref.shape, jnp.float32)
         acc_ref[...] = jnp.zeros(acc_ref.shape, jnp.float32)
 
-    q = q_ref[0, 0].astype(jnp.float32)           # (n_rep, hd)
+    q = q_ref[0, 0].astype(jnp.float32)           # (C, n_rep, hd)
     k = k_ref[0, :, 0].astype(jnp.float32)        # (ps, hd)
-    s = (q @ k.T) * scale                         # (n_rep, ps)
+    # (C, n_rep, ps): contract hd, no batch dims.
+    s = jax.lax.dot_general(q, k, (((2,), (1,)), ((), ()))) * scale
 
     k_pos = pos_ref[...]                          # (1, ps) int32
-    q_pos = qp_ref[i]
-    diff = q_pos - k_pos
-    keep = (k_pos >= 0) & (bt_ref[i, p] >= 0)     # unwritten / unmapped
+    q_pos = qp_ref[0]                             # (C,) int32
+    diff = q_pos[:, None, None] - k_pos[None]     # (C, 1, ps)
+    keep = (k_pos >= 0)[None] & (bt_ref[i, p] >= 0)   # unwritten / unmapped
     if causal:
-        keep &= diff >= 0
+        keep = keep & (diff >= 0)
     if window is not None:
-        keep &= diff < window
-    s = jnp.where(keep, s, NEG_INF)               # (1, ps) bcast (n_rep, ps)
+        keep = keep & (diff < window)
+    s = jnp.where(keep, s, NEG_INF)               # (C, 1, ps) bcast
 
-    m_prev, l_prev = m_ref[...], l_ref[...]       # (n_rep, 1)
+    m_prev, l_prev = m_ref[...], l_ref[...]       # (C, n_rep, 1)
     m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
     alpha = jnp.exp(m_prev - m_new)
-    pr = jnp.exp(s - m_new)                       # (n_rep, ps)
+    pr = jnp.exp(s - m_new)                       # (C, n_rep, ps)
     l_ref[...] = l_prev * alpha + jnp.sum(pr, axis=-1, keepdims=True)
     m_ref[...] = m_new
+    v = v_ref[0, :, 0].astype(jnp.float32)        # (ps, hd)
     acc_ref[...] = acc_ref[...] * alpha + \
-        pr @ v_ref[0, :, 0].astype(jnp.float32)
+        jax.lax.dot_general(pr, v, (((2,), (0,)), ((), ())))
 
     @pl.when(p == n_pages - 1)
     def _done():
@@ -81,46 +85,47 @@ def paged_decode_attention(q, k_pages, v_pages, pos_pages, block_table,
                            q_pos, *, scale: float, causal: bool = True,
                            window: Optional[int] = None,
                            interpret: bool = False):
-    """q: (B, 1, H, hd); k_pages/v_pages: (P, ps, KVH, hd); pos_pages:
-    (P, ps) int32; block_table: (B, max_pages) int32; q_pos: (B, 1) int32.
-    Returns (B, 1, H, hd)."""
-    b, _, h, hd = q.shape
+    """q: (B, C, H, hd); k_pages/v_pages: (P, ps, KVH, hd); pos_pages:
+    (P, ps) int32; block_table: (B, max_pages) int32; q_pos: (B, C) int32.
+    Returns (B, C, H, hd).  C == 1 is the classic single-token decode."""
+    b, c, h, hd = q.shape
     _, ps, kvh, _ = k_pages.shape
     n_rep = h // kvh
     n_pages = block_table.shape[1]
     # Head order matches _repeat_kv: q head kv*n_rep + r shares KV head kv.
-    qr = q[:, 0].reshape(b, kvh, n_rep, hd)
+    qr = q.reshape(b, c, kvh, n_rep, hd).transpose(0, 2, 1, 3, 4)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,                    # block_table, q_pos
+        num_scalar_prefetch=1,                    # block_table
         grid=(b, kvh, n_pages),
         in_specs=[
-            pl.BlockSpec((1, 1, n_rep, hd),
-                         lambda i, j, p, bt, qp: (i, j, 0, 0)),
+            pl.BlockSpec((1, c), lambda i, j, p, bt: (i, 0)),
+            pl.BlockSpec((1, 1, c, n_rep, hd),
+                         lambda i, j, p, bt: (i, j, 0, 0, 0)),
             pl.BlockSpec((1, ps, 1, hd),
-                         lambda i, j, p, bt, qp:
+                         lambda i, j, p, bt:
                          (jnp.maximum(bt[i, p], 0), 0, j, 0)),
             pl.BlockSpec((1, ps, 1, hd),
-                         lambda i, j, p, bt, qp:
+                         lambda i, j, p, bt:
                          (jnp.maximum(bt[i, p], 0), 0, j, 0)),
             pl.BlockSpec((1, ps),
-                         lambda i, j, p, bt, qp:
+                         lambda i, j, p, bt:
                          (jnp.maximum(bt[i, p], 0), 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, n_rep, hd),
-                               lambda i, j, p, bt, qp: (i, j, 0, 0)),
+        out_specs=pl.BlockSpec((1, 1, c, n_rep, hd),
+                               lambda i, j, p, bt: (i, j, 0, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((n_rep, hd), jnp.float32),
-            pltpu.VMEM((n_rep, 1), jnp.float32),
-            pltpu.VMEM((n_rep, 1), jnp.float32),
+            pltpu.VMEM((c, n_rep, hd), jnp.float32),
+            pltpu.VMEM((c, n_rep, 1), jnp.float32),
+            pltpu.VMEM((c, n_rep, 1), jnp.float32),
         ],
     )
     out = pl.pallas_call(
         functools.partial(_paged_kernel, scale=scale, causal=causal,
                           window=window, n_pages=n_pages),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, kvh, n_rep, hd), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, c, n_rep, hd), q.dtype),
         interpret=interpret,
-    )(block_table.astype(jnp.int32), q_pos[:, 0].astype(jnp.int32),
+    )(block_table.astype(jnp.int32), q_pos.astype(jnp.int32),
       qr, k_pages, v_pages, pos_pages)
-    return out.reshape(b, 1, h, hd)
+    return out.transpose(0, 2, 1, 3, 4).reshape(b, c, h, hd)

@@ -19,7 +19,7 @@ _INTERPRET = jax.default_backend() != "tpu"
 def paged_attention(q, k_pages, v_pages, pos_pages, block_table, q_pos, *,
                     scale: float, causal: bool = True,
                     window: Optional[int] = None, use_kernel: bool = False):
-    """q: (B, 1, H, hd) -> (B, 1, H, hd); see ``ref.paged_attention``."""
+    """q: (B, C, H, hd) -> (B, C, H, hd); see ``ref.paged_attention``."""
     if use_kernel:
         return kernel.paged_decode_attention(
             q, k_pages, v_pages, pos_pages, block_table, q_pos, scale=scale,

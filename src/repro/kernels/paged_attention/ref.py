@@ -43,12 +43,13 @@ def gather_positions(pos_pages, block_table):
 def paged_attention(q, k_pages, v_pages, pos_pages, block_table, q_pos, *,
                     scale: float, causal: bool = True,
                     window: Optional[int] = None):
-    """Single-token decode attention over a paged KV pool.
+    """Decode attention over a paged KV pool for a C-row query block
+    (C == 1: classic single-token decode; C > 1: chunked prefill).
 
-    q: (B, 1, H, hd) post-RoPE queries; k_pages/v_pages: (P, ps, KVH, hd);
+    q: (B, C, H, hd) post-RoPE queries; k_pages/v_pages: (P, ps, KVH, hd);
     pos_pages: (P, ps) int32 written positions (-1 = unwritten);
     block_table: (B, max_pages) int32 pool-page ids (-1 = unmapped);
-    q_pos: (B, 1) int32 absolute query positions.  Returns (B, 1, H, hd).
+    q_pos: (B, C) int32 absolute query positions.  Returns (B, C, H, hd).
 
     Rows with zero valid keys (an emptied slot) produce a uniform average of
     garbage — callers mask those lanes out, exactly as the contiguous path

@@ -18,6 +18,13 @@ allocator refuses is admitted):
 
     PYTHONPATH=src python -m repro.launch.serve --smoke --workload poisson \
         --paged --gen 8
+
+Chunked prefill (an admitted prompt feeds up to C tokens per decode step,
+so its lane reaches the first generated token in ~Lp/C steps instead of Lp;
+the slot's other lanes keep decoding one token per step):
+
+    PYTHONPATH=src python -m repro.launch.serve --smoke --workload poisson \
+        --paged --prefill-chunk 4 --gen 8
 """
 import argparse
 import os
@@ -67,12 +74,19 @@ def _run_workload(args, cfg, mesh, mi, jax, Backbone, Engine):
     print(f"[serve] workload={args.workload}: {args.num_requests} requests "
           f"over {lanes} lanes ({args.batch} slots x {n})"
           + (f", paged (page_size={cfg.serving.page_size})"
-             if cfg.serving.paged else ""))
+             if cfg.serving.paged else "")
+          + (f", prefill_chunk={cfg.serving.prefill_chunk}"
+             if cfg.serving.prefill_chunk > 1 else ""))
     print(f"[serve] continuous: {stats.decode_steps} decode steps, "
           f"{stats.generated_tokens} tokens in {dt:.2f}s "
           f"({stats.generated_tokens / max(dt, 1e-9):.0f} tok/s), "
           f"occupancy {stats.mean_occupancy:.2f}, "
           f"{stats.slot_resets} slot resets")
+    ramp = [q.ramp_latency for q in sched.finished]
+    if ramp:
+        import numpy as _np
+        print(f"[serve] ramp: mean {_np.mean(ramp):.2f} steps from admission "
+              f"to first token (max {max(ramp)})")
     if cfg.serving.paged:
         table = sched.allocator.table
         print(f"[serve] pool: peak {table.peak_in_use}/{table.usable_pages} "
@@ -117,6 +131,9 @@ def main(argv=None):
                     help="positions per KV page")
     ap.add_argument("--pool-pages", type=int, default=0,
                     help="shared pool size (0 = dense equivalent)")
+    ap.add_argument("--prefill-chunk", type=int, default=1,
+                    help="prompt tokens fed per decode step while a lane "
+                         "ramps (1 = classic one-token ramp)")
     args = ap.parse_args(argv)
     workload = args.workload == "poisson"
     if args.batch is None:
@@ -148,12 +165,13 @@ def main(argv=None):
 
     getter = get_smoke_config if args.smoke else get_config
     cfg = getter(args.arch, mux_n=args.mux_n)
-    if args.paged:
+    if args.paged or args.prefill_chunk > 1:
         import dataclasses
         from repro.configs.base import ServingConfig
         cfg = dataclasses.replace(cfg, serving=ServingConfig(
-            paged=True, page_size=args.page_size,
-            pool_pages=args.pool_pages))
+            paged=args.paged, page_size=args.page_size,
+            pool_pages=args.pool_pages,
+            prefill_chunk=args.prefill_chunk))
     print(f"[serve] {cfg.name} N={cfg.mux.n} on mesh "
           f"{dict(zip(mesh.axis_names, mesh.devices.shape))}")
 

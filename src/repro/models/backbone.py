@@ -103,20 +103,27 @@ def _layer_cache(cfg: ModelConfig, kind: dict, batch: int, max_len: int,
 
 def _layer_apply(p, x, cfg: ModelConfig, kind: dict, *, positions,
                  cache=None, cache_index=None, cross_kv=None,
-                 block_table=None, mesh=None, mesh_info: MeshInfo = SINGLE):
+                 block_table=None, chunk_lens=None, mesh=None,
+                 mesh_info: MeshInfo = SINGLE):
     norm = make_norm(cfg.norm)
     mixer = kind["mixer"]
     aux = jnp.zeros((), jnp.float32)
     new_cache = None
+    if chunk_lens is not None and mixer not in ("attn", "mla"):
+        raise ValueError(
+            f"chunked decode (serving.prefill_chunk > 1) is not supported "
+            f"for {mixer!r} mixers — recurrent state has no per-row "
+            f"validity; set prefill_chunk=1 for SSM/hybrid archs")
     h = norm.apply(p["norm1"], x)
     if mixer == "attn":
         out, new_cache = Attention.apply(
             p["attn"], h, cfg.attn_config(window=kind["window"]),
             positions=positions, cache=cache, cache_index=cache_index,
-            block_table=block_table)
+            block_table=block_table, chunk_lens=chunk_lens)
     elif mixer == "mla":
         out, new_cache = MLA.apply(p["attn"], h, cfg.mla, positions=positions,
-                                   cache=cache, cache_index=cache_index)
+                                   cache=cache, cache_index=cache_index,
+                                   chunk_lens=chunk_lens)
     elif mixer == "mamba":
         out, new_cache = Mamba.apply(p["mamba"], h, cfg.mamba, cache=cache)
     elif mixer == "mlstm":
@@ -281,7 +288,8 @@ class Backbone:
     @staticmethod
     def _run_blocks(params, x, cfg: ModelConfig, *, positions, cache=None,
                     cache_index=None, cross_kv=None, block_table=None,
-                    mesh=None, mesh_info: MeshInfo = SINGLE):
+                    chunk_lens=None, mesh=None,
+                    mesh_info: MeshInfo = SINGLE):
         kinds = cfg.layer_kinds()
         head, period, groups = cfg.layer_pattern()
         aux_total = jnp.zeros((), jnp.float32)
@@ -299,6 +307,7 @@ class Backbone:
             x, nc, aux = _layer_apply(lp, x, cfg, kind, positions=positions,
                                       cache=lcache, cache_index=cache_index,
                                       cross_kv=ckv, block_table=block_table,
+                                      chunk_lens=chunk_lens,
                                       mesh=mesh, mesh_info=mesh_info)
             if sp_spec is not None:
                 x = _constrain(x, mesh, sp_spec)
@@ -456,7 +465,7 @@ class Backbone:
     @staticmethod
     def decode_step(params, tokens, cache, cache_index, cfg: ModelConfig, *,
                     index_embeds=None, cross_kv=None, lane_mask=None,
-                    block_table=None, mesh=None,
+                    block_table=None, chunk_lens=None, mesh=None,
                     mesh_info: MeshInfo = SINGLE):
         """One decode step.
 
@@ -473,9 +482,26 @@ class Backbone:
         for the paged attention layers' writes and gathers.
         Returns (logits, new_cache): logits (B, N, vocab) when mux active
         else (B, vocab).
+
+        Chunked decode (``chunk_lens`` (B,) int32 given): tokens carry a
+        trailing chunk axis — (B, N, C) / (B, C) — and ``cache_index`` is
+        the (B,) base position of each slot's chunk; slot b writes cache
+        rows ``[cache_index[b], cache_index[b] + chunk_lens[b])`` in one
+        call, so a ramping prompt consumes ~Lp/C steps instead of Lp.
+        ``lane_mask`` becomes (B, N, C): a non-ramping lane contributes its
+        token at row 0 only — its extra chunk rows are masked out of the
+        mixed stream (and therefore the KV write) and of the logits.
+        Returns logits (B, N, C, vocab) / (B, C, vocab).
         """
         mux = cfg.mux
         ci = jnp.asarray(cache_index, jnp.int32)
+        if chunk_lens is not None:
+            return Backbone._chunked_decode_step(
+                params, tokens, cache, ci, cfg,
+                chunk_lens=jnp.asarray(chunk_lens, jnp.int32),
+                index_embeds=index_embeds, cross_kv=cross_kv,
+                lane_mask=lane_mask, block_table=block_table, mesh=mesh,
+                mesh_info=mesh_info)
         if mux.active:
             b, n = tokens.shape
             emb = Backbone.embed(params, tokens[:, :, None], cfg)  # (B,N,1,d)
@@ -507,5 +533,46 @@ class Backbone:
             logits = Backbone.logits(params, h[:, 0], cfg)           # (B,V)
             if lane_mask is not None:
                 logits = jnp.where(lane_mask[:, :1].astype(bool),
+                                   logits, 0.0)
+        return logits, new_cache
+
+    @staticmethod
+    def _chunked_decode_step(params, tokens, cache, ci, cfg: ModelConfig, *,
+                             chunk_lens, index_embeds=None, cross_kv=None,
+                             lane_mask=None, block_table=None, mesh=None,
+                             mesh_info: MeshInfo = SINGLE):
+        """Chunked-prefill decode step (see ``decode_step``): a (B, ·, C)
+        token chunk advances slot b by ``chunk_lens[b]`` positions."""
+        mux = cfg.mux
+        if mux.active:
+            b, n, c = tokens.shape
+            emb = Backbone.embed(params, tokens, cfg)          # (B,N,C,d)
+            if lane_mask is not None:
+                emb = emb * lane_mask[..., None].astype(emb.dtype)
+            x = get_mux(mux.strategy).apply(params["mux"], emb,
+                                            mux)               # (B,C,d)
+        else:
+            b, c = tokens.shape
+            x = Backbone.embed(params, tokens, cfg)            # (B,C,d)
+            if lane_mask is not None:
+                x = x * lane_mask[:, 0, :, None].astype(x.dtype)
+
+        positions = ci[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
+        h, new_cache, _ = Backbone._run_blocks(
+            params, x, cfg, positions=positions, cache=cache,
+            cache_index=ci, cross_kv=cross_kv, block_table=block_table,
+            chunk_lens=chunk_lens, mesh=mesh, mesh_info=mesh_info)
+
+        if mux.active:
+            demuxed = get_demux(mux.demux).apply(
+                params["demux"], h, mux, index_embeds=index_embeds)
+            logits = Backbone.logits(params, demuxed, cfg)     # (B,N,C,V)
+            if lane_mask is not None:
+                logits = jnp.where(lane_mask[..., None].astype(bool),
+                                   logits, 0.0)
+        else:
+            logits = Backbone.logits(params, h, cfg)           # (B,C,V)
+            if lane_mask is not None:
+                logits = jnp.where(lane_mask[:, 0, :, None].astype(bool),
                                    logits, 0.0)
         return logits, new_cache

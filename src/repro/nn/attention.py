@@ -159,6 +159,27 @@ def chunked_dot_product_attention(q, k, v, q_pos, k_pos, scale: float, *,
     return (acc / denom).astype(v.dtype)
 
 
+def masked_chunk_write(cache, idx, row_ok, values: dict, pos_q):
+    """Row-masked chunk scatter shared by the chunked-decode paths: write C
+    rows per slot at ``idx`` (B, C) into each ``cache[key]`` (B, S, ...),
+    keeping the existing entry wherever ``row_ok`` (B, C) is False (the
+    invalid row writes back the value already there, so it is an exact
+    no-op; ``idx`` rows are distinct because C <= S, so the scatter is
+    deterministic).  ``pos`` is merged the same way from ``pos_q``.
+    """
+    b = idx.shape[0]
+    rows = jnp.arange(b)[:, None]
+    out = {}
+    for key, new in values.items():
+        old = cache[key][rows, idx]
+        keep = row_ok.reshape(row_ok.shape + (1,) * (new.ndim - 2))
+        out[key] = cache[key].at[rows, idx].set(
+            jnp.where(keep, new.astype(cache[key].dtype), old))
+    p_new = jnp.where(row_ok, pos_q, cache["pos"][rows, idx])
+    out["pos"] = cache["pos"].at[rows, idx].set(p_new)
+    return out
+
+
 def make_attention_mask(q_pos, k_pos, *, causal: bool, window: Optional[int],
                         k_valid=None):
     """Boolean (B, 1, Lq, Lk) mask from query/key positions.
@@ -227,7 +248,7 @@ class Attention:
 
     @staticmethod
     def apply(params, x, cfg: AttnConfig, *, positions, cache=None,
-              cache_index=None, block_table=None):
+              cache_index=None, block_table=None, chunk_lens=None):
         """x: (B, L, D). Returns (out, new_cache).
 
         Full-sequence mode (cache None): causal/window mask over x itself.
@@ -238,6 +259,11 @@ class Attention:
         Paged decode (cache holds ``k_pages``): ``block_table`` (B, max_pages)
         maps each slot's page index to a pool page; writes and the attention
         gather go through the table.
+        Chunked decode (``chunk_lens`` (B,) int32 given): L == C is a token
+        chunk; row i of slot b sits at position ``positions[b, i]`` and only
+        rows ``i < chunk_lens[b]`` are real — a ramping prompt writes C
+        cache rows per call while other slots advance one.  Invalid rows are
+        exact no-op writes (contiguous) or land on the trash page (paged).
         """
         b, l, _ = x.shape
         q = Linear.apply(params["wq"], x).reshape(b, l, cfg.n_heads, cfg.head_dim)
@@ -249,6 +275,12 @@ class Attention:
         k = apply_rope(k, positions, cfg.rope_theta)
 
         n_rep = cfg.n_heads // cfg.n_kv_heads
+
+        if cache is not None and chunk_lens is not None:
+            out, new_cache = Attention._chunked_decode(
+                q, k, v, cfg, cache, positions, chunk_lens, block_table)
+            out = out.reshape(b, l, cfg.n_heads * cfg.head_dim)
+            return Linear.apply(params["wo"], out), new_cache
 
         if cache is not None and l > 1:
             # Prefill: compute full attention AND fill the cache.  Ring-buffer
@@ -375,6 +407,84 @@ class Attention:
 
         out = out.reshape(b, l, cfg.n_heads * cfg.head_dim)
         return Linear.apply(params["wo"], out), new_cache
+
+    @staticmethod
+    def _chunked_decode(q, k, v, cfg: AttnConfig, cache, positions,
+                        chunk_lens, block_table):
+        """Multi-token decode: write up to C cache rows per slot, then attend
+        each chunk row against the full (updated) cache.
+
+        q: (B, C, H, hd); k/v: (B, C, KVH, hd); positions: (B, C) absolute;
+        chunk_lens: (B,) valid rows per slot.  Rows ``i >= chunk_lens[b]``
+        must not disturb the cache: contiguous caches get a gather → where →
+        scatter (the invalid row writes back the value already there, and
+        because C <= slots every row targets a distinct cache slot, the
+        scatter is deterministic); paged caches route invalid rows to the
+        reserved trash page.  Row i's causal mask covers rows <= i of the
+        same chunk — they are written before the attention runs — so a
+        C-wide ramp is exactly the C sequential single-token steps.
+        """
+        b, c = positions.shape
+        rows = jnp.arange(b)[:, None]
+        row_ok = jnp.arange(c)[None, :] < jnp.asarray(chunk_lens,
+                                                      jnp.int32)[:, None]
+        pos_q = jnp.asarray(positions, jnp.int32)
+        n_rep = cfg.n_heads // cfg.n_kv_heads
+
+        if "k_pages" in cache:
+            assert block_table is not None, "paged cache needs a block_table"
+            ps = cache["pos"].shape[1]
+            page_idx = jnp.clip(pos_q // ps, 0, block_table.shape[1] - 1)
+            page_ids = jnp.maximum(block_table[rows, page_idx], 0)
+            page_ids = jnp.where(row_ok, page_ids, 0)   # invalid rows: trash
+            off = pos_q % ps
+            k_pages = cache["k_pages"].at[page_ids, off].set(
+                k.astype(cache["k_pages"].dtype))
+            v_pages = cache["v_pages"].at[page_ids, off].set(
+                v.astype(cache["v_pages"].dtype))
+            pos_pages = cache["pos"].at[page_ids, off].set(
+                jnp.where(row_ok, pos_q, -1))
+            new_cache = {"k_pages": k_pages, "v_pages": v_pages,
+                         "pos": pos_pages}
+            from repro.kernels.paged_attention import ops as paged_ops
+            out = paged_ops.paged_attention(
+                q, k_pages, v_pages, pos_pages, block_table, pos_q,
+                scale=cfg.scale, causal=cfg.causal, window=cfg.window,
+                use_kernel=cfg.paged_kernel)
+            return out, new_cache
+
+        slots = cache["k"].shape[1]
+        slot = (pos_q % slots).astype(jnp.int32)        # distinct: C <= slots
+        new_cache = masked_chunk_write(
+            cache, slot, row_ok, {"k": k, "v": v}, pos_q)
+        if cfg.window is not None:
+            # Ring semantics: all C writes land before the attention runs,
+            # so a later chunk row's write can physically evict an in-window
+            # key an earlier row still needs (sequentially, position p+i-W
+            # is evicted only at step i).  Attend over the *pre-write* ring
+            # plus the chunk itself: an old key inside row i's window is
+            # never one the chunk rows <= i overwrite (eviction targets are
+            # exactly the out-of-window positions), and chunk positions are
+            # disjoint from the old ring's, so each position is counted
+            # once — bitwise the C sequential steps.
+            chunk_pos = jnp.where(row_ok, pos_q, -1)
+            # round-trip through the cache dtype, as stored keys would be
+            k_att = jnp.concatenate(
+                [cache["k"], k.astype(cache["k"].dtype)],
+                axis=1).astype(q.dtype)
+            v_att = jnp.concatenate(
+                [cache["v"], v.astype(cache["v"].dtype)],
+                axis=1).astype(q.dtype)
+            pos_att = jnp.concatenate([cache["pos"], chunk_pos], axis=1)
+        else:
+            k_att = new_cache["k"].astype(q.dtype)
+            v_att = new_cache["v"].astype(q.dtype)
+            pos_att = new_cache["pos"]
+        mask = make_attention_mask(pos_q, pos_att, causal=cfg.causal,
+                                   window=cfg.window, k_valid=pos_att >= 0)
+        out = dot_product_attention(q, _repeat_kv(k_att, n_rep),
+                                    _repeat_kv(v_att, n_rep), mask, cfg.scale)
+        return out, new_cache
 
 
 # ---------------------------------------------------------------------------
@@ -511,13 +621,31 @@ class MLA:
 
     @staticmethod
     def apply(params, x, cfg: MLAConfig, *, positions, cache=None,
-              cache_index=None):
+              cache_index=None, chunk_lens=None):
         b, l, _ = x.shape
         q = MLA._queries(params, x, cfg, positions)
         kv_a = Linear.apply(params["wkv_a"], x)
         ckv, krope_raw = jnp.split(kv_a, [cfg.kv_lora_rank], axis=-1)
         krope = apply_rope(krope_raw[:, :, None, :], positions,
                            cfg.rope_theta)[:, :, 0, :]
+
+        if cache is not None and chunk_lens is not None:
+            # Chunked decode: write up to C latent rows per slot (invalid
+            # rows are exact no-op writes, same gather → where → scatter as
+            # the GQA path), then run the absorbed-matrix attention with a
+            # (B, C) query block.
+            s_len = cache["ckv"].shape[1]
+            row_ok = jnp.arange(l)[None, :] < jnp.asarray(chunk_lens,
+                                                          jnp.int32)[:, None]
+            pos_q = jnp.asarray(positions, jnp.int32)
+            idx = (pos_q % s_len).astype(jnp.int32)
+            new_cache = masked_chunk_write(
+                cache, idx, row_ok, {"ckv": ckv, "krope": krope}, pos_q)
+            out = MLA._absorbed_attention(
+                params, q, new_cache["ckv"], new_cache["krope"],
+                new_cache["pos"], pos_q, cfg)
+            out = out.reshape(b, l, cfg.n_heads * cfg.v_head_dim)
+            return Linear.apply(params["wo"], out), new_cache
 
         if cache is None or l > 1:
             k, v = MLA._expand_kv(params, ckv, krope, cfg)
@@ -570,27 +698,36 @@ class MLA:
                     jnp.broadcast_to(positions, (b, 1)).astype(jnp.int32),
                     (0, ci))
             new_cache = {"ckv": ckv_c, "krope": krope_c, "pos": pos}
-            q_nope = q[..., : cfg.qk_nope_head_dim]
-            q_rope = q[..., cfg.qk_nope_head_dim:]
-            # Absorb W_uk into the query:  q_lat[h] = W_uk[h]^T q_nope[h]
-            w_uk = params["wk_b"]["w"].astype(q.dtype).reshape(
-                cfg.kv_lora_rank, cfg.n_heads, cfg.qk_nope_head_dim)
-            q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope, w_uk)
-            ckv_f = ckv_c.astype(q.dtype)
-            logits = (jnp.einsum("bqhr,bsr->bhqs", q_lat, ckv_f) +
-                      jnp.einsum("bqhd,bsd->bhqs", q_rope,
-                                 krope_c.astype(q.dtype)))
-            logits = logits.astype(jnp.float32) * cfg.scale
-            mask = make_attention_mask(jnp.broadcast_to(positions, (b, 1)), pos,
-                                       causal=True, window=None,
-                                       k_valid=pos >= 0)
-            logits = jnp.where(mask, logits, NEG_INF)
-            probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
-            o_lat = jnp.einsum("bhqs,bsr->bqhr", probs, ckv_f)
-            # Absorb W_uv on the way out:  out[h] = W_uv[h] o_lat[h]
-            w_uv = params["wv_b"]["w"].astype(q.dtype).reshape(
-                cfg.kv_lora_rank, cfg.n_heads, cfg.v_head_dim)
-            out = jnp.einsum("bqhr,rhv->bqhv", o_lat, w_uv)
+            out = MLA._absorbed_attention(
+                params, q, ckv_c, krope_c, pos,
+                jnp.broadcast_to(positions, (b, 1)), cfg)
 
         out = out.reshape(b, l, cfg.n_heads * cfg.v_head_dim)
         return Linear.apply(params["wo"], out), new_cache
+
+    @staticmethod
+    def _absorbed_attention(params, q, ckv_c, krope_c, pos, q_pos,
+                            cfg: MLAConfig):
+        """Absorbed-matrix decode attention (DeepSeek-V3 serving form) for a
+        (B, Lq) query block over the compressed latent cache — attention is
+        computed entirely in latent space, never expanding per-head K/V."""
+        q_nope = q[..., : cfg.qk_nope_head_dim]
+        q_rope = q[..., cfg.qk_nope_head_dim:]
+        # Absorb W_uk into the query:  q_lat[h] = W_uk[h]^T q_nope[h]
+        w_uk = params["wk_b"]["w"].astype(q.dtype).reshape(
+            cfg.kv_lora_rank, cfg.n_heads, cfg.qk_nope_head_dim)
+        q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope, w_uk)
+        ckv_f = ckv_c.astype(q.dtype)
+        logits = (jnp.einsum("bqhr,bsr->bhqs", q_lat, ckv_f) +
+                  jnp.einsum("bqhd,bsd->bhqs", q_rope,
+                             krope_c.astype(q.dtype)))
+        logits = logits.astype(jnp.float32) * cfg.scale
+        mask = make_attention_mask(q_pos, pos, causal=True, window=None,
+                                   k_valid=pos >= 0)
+        logits = jnp.where(mask, logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+        o_lat = jnp.einsum("bhqs,bsr->bqhr", probs, ckv_f)
+        # Absorb W_uv on the way out:  out[h] = W_uv[h] o_lat[h]
+        w_uv = params["wv_b"]["w"].astype(q.dtype).reshape(
+            cfg.kv_lora_rank, cfg.n_heads, cfg.v_head_dim)
+        return jnp.einsum("bqhr,rhv->bqhv", o_lat, w_uv)

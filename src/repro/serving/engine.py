@@ -62,6 +62,23 @@ class Engine:
         self.max_len = max_len + cfg.mux.prefix_len
         self.mesh = mesh
         self.mesh_info = mesh_info
+        chunk = cfg.serving.prefill_chunk
+        if chunk > 1:
+            # Chunked decode needs per-row write validity, which recurrent
+            # (SSM) state doesn't have, and C distinct ring slots per chunk.
+            kinds = cfg.layer_kinds()
+            bad = sorted({k["mixer"] for k in kinds
+                          if k["mixer"] not in ("attn", "mla")})
+            if bad:
+                raise ValueError(
+                    f"serving.prefill_chunk={chunk} unsupported with "
+                    f"{bad} mixers; set prefill_chunk=1")
+            slots = min([self.max_len] +
+                        [k["window"] for k in kinds if k["window"]])
+            if chunk > slots:
+                raise ValueError(
+                    f"serving.prefill_chunk={chunk} exceeds the smallest "
+                    f"cache ring ({slots} slots); shrink the chunk")
         self._prefill = jax.jit(self._prefill_impl) if jit \
             else self._prefill_impl
         # Donate the cache: the decode step aliases the KV buffers instead of
@@ -69,7 +86,9 @@ class Engine:
         # without donation support, e.g. CPU — then it simply copies).
         self._step = jax.jit(self._step_impl, donate_argnums=(2,)) if jit \
             else self._step_impl
-        self._prime = jax.jit(self._prime_impl) if jit else self._prime_impl
+        self._prime = jax.jit(self._prime_impl,
+                              static_argnames=("prime_len",)) if jit \
+            else self._prime_impl
 
     # -- impl -------------------------------------------------------------------
 
@@ -86,15 +105,22 @@ class Engine:
         return (out["cache"], out["index_embeds"], last_logits,
                 jnp.asarray(lp, jnp.int32))
 
-    def _prime_impl(self, params):
+    def _prime_impl(self, params, prime_len: int):
         """Prefix-only prefill: run the demux prefix (no content tokens)
         through the backbone so the cache holds exactly the prefix K/V and
         ``index_embeds`` are captured.  For causal models the prefix hidden
         states attend only to the prefix, so this primed state is
         input-independent — the slot allocator resets retired slots back to
-        it without re-running any prefill."""
+        it without re-running any prefill.
+
+        ``prime_len``: width of the primed cache.  ``max_len`` gives the
+        full-size template the contiguous allocator swaps in on slot reset;
+        ``prefix_len`` gives a prefix-sized template — the paged allocator
+        imports the prefix pages from it without ever materialising a dense
+        (B, max_len) transient (the positions beyond the prefix are all
+        unwritten, so nothing is lost)."""
         cfg = self.cfg
-        cache = Backbone.init_cache(cfg, self.batch, self.max_len)
+        cache = Backbone.init_cache(cfg, self.batch, prime_len)
         empty = jnp.zeros((self.batch, cfg.mux.n, 0), jnp.int32)
         out = Backbone.apply(params, empty, cfg, cache=cache,
                              mesh=self.mesh, mesh_info=self.mesh_info,
@@ -102,11 +128,12 @@ class Engine:
         return out["cache"], out["index_embeds"]
 
     def _step_impl(self, params, tokens, cache, pos, index_embeds, cross_kv,
-                   lane_mask, block_table):
+                   lane_mask, block_table, chunk_lens=None):
         return Backbone.decode_step(
             params, tokens, cache, pos, self.cfg,
             index_embeds=index_embeds, cross_kv=cross_kv,
-            lane_mask=lane_mask, block_table=block_table, mesh=self.mesh,
+            lane_mask=lane_mask, block_table=block_table,
+            chunk_lens=chunk_lens, mesh=self.mesh,
             mesh_info=self.mesh_info)
 
     # -- public API -----------------------------------------------------------------
@@ -126,11 +153,17 @@ class Engine:
                                        index_embeds=index_embeds,
                                        cross_kv=cross_kv)
 
-    def prime(self, context=None) -> ServeState:
+    def prime(self, context=None, *, compact: bool = False) -> ServeState:
         """Prefix-primed state for continuous batching: cache holds only the
         demux-prefix K/V, ``pos`` is a (B,) vector at ``prefix_len``.  With a
         non-prefix demux (or mux inactive) the cache is simply fresh and
-        ``pos`` starts at 0."""
+        ``pos`` starts at 0.
+
+        ``compact``: prime against a *prefix-sized* cache (width
+        ``prefix_len``, or 1 when there is no prefix) instead of the full
+        ``max_len`` one.  The prefix K/V values are bitwise identical either
+        way; the paged allocator imports from the compact template directly,
+        so priming never materialises the dense (B, max_len) transient."""
         cfg = self.cfg
         cross_kv = None
         if context is not None:
@@ -139,29 +172,40 @@ class Engine:
                 mesh=self.mesh, mesh_info=self.mesh_info)
         p = cfg.mux.prefix_len
         if cfg.mux.active and p:
-            cache, index_embeds = self._prime(self.params)
+            cache, index_embeds = self._prime(
+                self.params, prime_len=(p if compact else self.max_len))
         else:
-            cache = Backbone.init_cache(cfg, self.batch, self.max_len)
+            cache = Backbone.init_cache(cfg, self.batch,
+                                        1 if compact else self.max_len)
             index_embeds = None
         pos = jnp.full((self.batch,), p, jnp.int32)
         return ServeState(cache=cache, pos=pos, index_embeds=index_embeds,
                           cross_kv=cross_kv)
 
     def step(self, state: ServeState, tokens, lane_mask=None,
-             block_table=None) -> tuple[jnp.ndarray, ServeState]:
+             block_table=None, chunk_lens=None
+             ) -> tuple[jnp.ndarray, ServeState]:
         """One decode step.  ``state.pos`` may be scalar (lock-step) or (B,)
         (continuous); ``lane_mask`` (B, N) masks retired lanes out of the
         mixed stream and the logits; ``block_table`` (B, max_pages) routes
         paged-cache writes/gathers (``serving/paging.py``).  ``state.cache``
-        is donated — use the returned state from here on."""
+        is donated — use the returned state from here on.
+
+        Chunked prefill: with ``chunk_lens`` (B,), ``tokens`` carries a
+        trailing chunk axis (B, N, C) / (B, C), ``lane_mask`` is (B, N, C),
+        and slot b advances ``chunk_lens[b]`` positions (see
+        ``Backbone.decode_step``); logits come back per chunk row."""
         if lane_mask is not None:
             lane_mask = jnp.asarray(lane_mask)
+        if chunk_lens is not None:
+            chunk_lens = jnp.asarray(chunk_lens, jnp.int32)
         logits, cache = self._step(self.params, jnp.asarray(tokens),
                                    state.cache, state.pos,
                                    state.index_embeds, state.cross_kv,
-                                   lane_mask, block_table)
+                                   lane_mask, block_table, chunk_lens)
+        advance = 1 if chunk_lens is None else chunk_lens
         return logits, dataclasses.replace(state, cache=cache,
-                                           pos=state.pos + 1)
+                                           pos=state.pos + advance)
 
     def generate(self, prompts, steps: int, *, context=None,
                  greedy: bool = True, rng=None):

@@ -179,6 +179,12 @@ class PagedKVSlotAllocator:
             template = Backbone.init_cache(cfg, batch, max_len)
         self.cache = Backbone.init_cache(
             cfg, batch, max_len, page_pool=(self.pool_pages, ps))
+        # The template may be compact (prefix-sized, from
+        # ``Engine.prime(compact=True)``): paged layers import from it
+        # as-is, but ineligible contiguous layers must match the live
+        # cache's width — pad them out (positions beyond the prime are
+        # simply unwritten).
+        template = self._expand_template(template)
         # Reset template: contiguous layers only — paged layers reset via
         # the page table, so their (B, max_len) template slices are dropped
         # (the full contiguous pytree would shadow the pool's memory win).
@@ -222,6 +228,30 @@ class PagedKVSlotAllocator:
         for sec, axis in _SECTIONS:
             for i, layer in enumerate(cache[sec]):
                 yield sec, axis, i, layer, self._paged[sec][i]
+
+    def _expand_template(self, template):
+        """Pad a compact (prefix-sized) primed template's *contiguous*
+        layers out to the live cache's width.  Positions beyond the primed
+        prefix are unwritten either way, so padding k/v/state with zeros and
+        ``pos`` with the -1 sentinel reproduces the full-size prime bitwise.
+        Paged layers stay compact — the prefix-page import reads only the
+        prefix region.  A full-size template passes through untouched."""
+        out = {sec: list(template[sec]) for sec, _ in _SECTIONS}
+        for sec, axis, i, live, paged in self._walk(self.cache):
+            if paged:
+                continue
+            tmpl = template[sec][i]
+            new = {}
+            for key, leaf in tmpl.items():
+                target = live[key].shape
+                if not hasattr(leaf, "shape") or leaf.shape == target:
+                    new[key] = leaf
+                    continue
+                pad = [(0, t - s) for s, t in zip(leaf.shape, target)]
+                new[key] = jnp.pad(leaf, pad,
+                                   constant_values=-1 if key == "pos" else 0)
+            out[sec][i] = new
+        return out
 
     # -- jitted pytree ops ----------------------------------------------------
 
@@ -328,18 +358,27 @@ class PagedKVSlotAllocator:
         """Take ownership of the post-step cache pytree."""
         self.cache = cache
 
-    def ensure(self, positions, live_mask) -> None:
-        """Map every live slot's write position to a page before a decode
-        step.  Positions grow one at a time, so at most one page per slot is
-        missing; admission accounting guarantees the pool has room."""
+    def ensure(self, positions, live_mask, lens=None) -> None:
+        """Map every live slot's write range to pages before a decode step.
+        ``lens`` (B,) is the number of positions slot s writes this step
+        (default 1): chunked prefill covers ``[pos, pos + lens)``, so up to
+        ``ceil(chunk / page_size) + 1`` pages per slot may be allocated in
+        one call.  Admission accounting guarantees the pool has room."""
         ps = self.page_size
+        lens = np.ones(self.batch, np.int64) if lens is None \
+            else np.asarray(lens)
         fresh: list[int] = []
         for s in np.nonzero(np.asarray(live_mask))[0]:
-            j = int(positions[s]) // ps
-            if self.table.rows[s, j] < 0:
-                fresh.append(self.table.allocate(s, j))
+            first = int(positions[s]) // ps
+            last = (int(positions[s]) + max(1, int(lens[s])) - 1) // ps
+            for j in range(first, last + 1):
+                if self.table.rows[s, j] < 0:
+                    fresh.append(self.table.allocate(s, j))
         if fresh:
-            padded = np.full(self.batch, TRASH_PAGE, np.int32)
+            # Pad to a multiple of B so the jitted invalidate sees a handful
+            # of shapes at most (single-token decode always lands on B).
+            pad_to = self.batch * (1 + (len(fresh) - 1) // self.batch)
+            padded = np.full(pad_to, TRASH_PAGE, np.int32)
             padded[:len(fresh)] = fresh
             self.cache = self._invalidate(self.cache, jnp.asarray(padded))
             self._device_table = None

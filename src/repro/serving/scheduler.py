@@ -76,6 +76,7 @@ class Request:
     # runtime state (owned by the scheduler)
     admitted_step: int = -1
     finished_step: int = -1
+    first_token_step: int = -1    # step the first output token appeared
     output: list = dataclasses.field(default_factory=list)
     fed: int = 0                  # prompt tokens consumed so far (ramp cursor)
     rng: Any = None               # lazily built per-request sampler
@@ -85,6 +86,15 @@ class Request:
         return self.fed < len(self.prompt)
 
     @property
+    def ramp_latency(self) -> int:
+        """Decode steps from admission to the first generated token
+        (inclusive); -1 before the first token lands.  ~ceil(Lp/chunk)
+        under chunked prefill, Lp under the classic one-token ramp."""
+        if self.first_token_step < 0 or self.admitted_step < 0:
+            return -1
+        return self.first_token_step - self.admitted_step + 1
+
+    @property
     def done(self) -> bool:
         return self.finished_step >= 0
 
@@ -92,7 +102,8 @@ class Request:
         """Copy with runtime state reset, so a trace can be replayed by
         several engines/schedulers."""
         return dataclasses.replace(self, output=[], fed=0, admitted_step=-1,
-                                   finished_step=-1, rng=None)
+                                   finished_step=-1, first_token_step=-1,
+                                   rng=None)
 
 
 def poisson_trace(n_requests: int, *, rate: float, prompt_len: int,
@@ -168,8 +179,16 @@ class ContinuousScheduler:
         self.n_lanes = cfg.mux.n if cfg.mux.active else 1
         self.prefix_len = cfg.mux.prefix_len
         self.paged = cfg.serving.paged
+        # Chunked prefill: an admitted prompt feeds up to ``chunk`` tokens
+        # per decode step instead of one.  chunk == 1 keeps the legacy
+        # single-token step bit-for-bit.
+        self.chunk = max(1, cfg.serving.prefill_chunk)
 
-        primed = engine.prime()
+        # Paged: prime against a prefix-sized cache (no dense (B, max_len)
+        # transient); the allocator imports the prefix pages from it.  The
+        # contiguous allocator needs the full-width template for its masked
+        # slot resets, so it keeps the full prime.
+        primed = engine.prime(compact=self.paged)
         if self.paged:
             self.allocator = PagedKVSlotAllocator(
                 cfg, self.n_slots, engine.max_len, template=primed.cache)
@@ -254,6 +273,27 @@ class ContinuousScheduler:
 
     # -- admission ------------------------------------------------------------
 
+    def _live_ramp(self, slot: int) -> int:
+        """Max remaining prompt tokens among the slot's live ramping lanes —
+        the positions the slot will consume before its ramps drain."""
+        m = 0
+        for l in range(self.n_lanes):
+            rid = int(self.table.grid[slot, l])
+            if rid < 0:
+                continue
+            r = self.requests[rid]
+            if r.ramping:
+                m = max(m, len(r.prompt) - r.fed)
+        return m
+
+    def _ramp_cost(self, lp: int) -> int:
+        """Extra positions a co-lane rides through while a length-``lp``
+        prompt ramps chunked: the slot consumes ``lp`` positions in
+        ``ceil(lp / chunk)`` steps, so a decoding lane earns only
+        ``ceil(lp / chunk)`` tokens over that window — its end horizon
+        drifts out by the difference.  Zero when chunk == 1."""
+        return lp - -(-lp // self.chunk)
+
     def _fits_pages(self, slot: int, end: int, fresh: set) -> bool:
         """Paged admission: would every slot's worst-case footprint still
         fit the pool if this request (ending at ``end``) joined ``slot``?
@@ -295,15 +335,31 @@ class ContinuousScheduler:
                 else:
                     target[s] = int(self.pos[s])
             pos = target[s]
-            end = pos + len(req.prompt) + req.max_new_tokens
-            if end > self.engine.max_len:
+            lp, gen = len(req.prompt), req.max_new_tokens
+            live = self.lane_end[s] >= 0
+            cost = self._ramp_cost(lp)
+            if self.chunk > 1:
+                # Conservative chunked horizons: the new lane rides through
+                # any ramp already in flight (max(lp, live_ramp) positions
+                # before its own decode), and every co-lane's end drifts out
+                # by ``cost`` while this prompt ramps.
+                end = pos + max(lp, self._live_ramp(s)) + gen
+                bump_max = int((self.lane_end[s][live] + cost).max()) \
+                    if cost and live.any() else 0
+            else:
+                end = pos + lp + gen
+                bump_max = 0
+            if max(end, bump_max) > self.engine.max_len:
                 continue  # slot too deep for this request; try another lane
-            if self.paged and not self._fits_pages(s, end, fresh):
+            horizon = max(end, bump_max)
+            if self.paged and not self._fits_pages(s, horizon, fresh):
                 continue  # pool too full for this slot; try another lane
             self._pop()
             if pos != int(self.pos[s]):
                 to_reset[s] = True
             self.table.occupy(s, l, req.rid)
+            if cost:
+                self.lane_end[s, live] += cost
             self.lane_end[s, l] = end
             req.admitted_step = self.t
             n_planned += 1
@@ -334,6 +390,16 @@ class ContinuousScheduler:
         """Admit, run one jitted decode step for all B slots, then ramp /
         sample / retire per lane."""
         self._admit()
+        if self.chunk > 1:
+            mask, released = self._run_chunked_step()
+        else:
+            mask, released = self._run_single_step()
+        self._finish_step(mask, released)
+
+    def _run_single_step(self):
+        """Legacy one-token step: every live lane feeds exactly one token
+        (prompt ramp or last output) and every slot advances one position —
+        the ``prefill_chunk == 1`` path, bit-for-bit the original engine."""
         mask = self.table.lane_mask()                    # (B, N)
         tokens = np.zeros((self.n_slots, self.n_lanes), np.int32)
         for s in range(self.n_slots):
@@ -376,18 +442,93 @@ class ContinuousScheduler:
                     req.fed += 1
                     if req.ramping:      # prompt not fully consumed yet
                         continue
-                tok = self._sample(req, logits[s, l])
-                req.output.append(tok)
-                self.stats.generated_tokens += 1
-                if (len(req.output) >= req.max_new_tokens or
-                        (req.eos_id is not None and tok == req.eos_id)):
-                    self.table.release(s, l)
-                    self.lane_end[s, l] = -1
-                    released.add(s)
-                    req.finished_step = self.t
-                    self.finished.append(req)
-                    self.stats.finished += 1
+                self._emit(req, logits[s, l], s, l, released)
+        return mask, released
 
+    def _run_chunked_step(self):
+        """Chunked-prefill step (``prefill_chunk`` C > 1): each ramping lane
+        feeds up to C prompt tokens, its slot advances by the largest ramp
+        take (min 1), and the slot's non-ramping lanes decode exactly one
+        token — their extra chunk rows masked out of the mixed stream and
+        the logits (``lane_mask`` is (B, N, C) here)."""
+        C = self.chunk
+        mask = self.table.lane_mask()                    # (B, N) occupancy
+        tokens = np.zeros((self.n_slots, self.n_lanes, C), np.int32)
+        contrib = np.zeros((self.n_slots, self.n_lanes, C), np.float32)
+        valid = np.ones(self.n_slots, np.int32)          # rows per slot
+        takes = np.zeros((self.n_slots, self.n_lanes), np.int32)
+        for s in range(self.n_slots):
+            for l in range(self.n_lanes):
+                rid = int(self.table.grid[s, l])
+                if rid < 0:
+                    continue
+                req = self.requests[rid]
+                if req.ramping:
+                    take = min(C, len(req.prompt) - req.fed)
+                    tokens[s, l, :take] = req.prompt[req.fed:req.fed + take]
+                    contrib[s, l, :take] = 1.0
+                    takes[s, l] = take
+                    valid[s] = max(valid[s], take)
+                else:
+                    tokens[s, l, 0] = req.output[-1]
+                    contrib[s, l, 0] = 1.0
+
+        block_table = None
+        if self.paged:
+            # Map every live slot's write range [pos, pos + valid) to pages.
+            self.allocator.ensure(self.pos, mask.sum(axis=1) > 0, lens=valid)
+            block_table = self.allocator.block_table
+
+        state = ServeState(cache=self.allocator.cache, pos=self.pos.copy(),
+                           index_embeds=self.index_embeds,
+                           cross_kv=self.cross_kv)
+        mux_active = self.engine.cfg.mux.active
+        toks = tokens if mux_active else tokens[:, 0, :]
+        logits, state = self.engine.step(state, toks, lane_mask=contrib,
+                                         block_table=block_table,
+                                         chunk_lens=valid)
+        self.allocator.adopt(state.cache)
+        self.pos += valid
+        logits = np.asarray(logits)                      # (B, N, C, V)
+        if not mux_active:
+            logits = logits[:, None, :, :]               # (B, 1, C, V)
+
+        released = set()
+        for s in range(self.n_slots):
+            for l in range(self.n_lanes):
+                rid = int(self.table.grid[s, l])
+                if rid < 0:
+                    continue
+                req = self.requests[rid]
+                if req.ramping:
+                    take = int(takes[s, l])
+                    req.fed += take
+                    if req.ramping:      # prompt not fully consumed yet
+                        continue
+                    row = take - 1       # first token: last prompt row
+                else:
+                    row = 0
+                self._emit(req, logits[s, l, row], s, l, released)
+        return mask, released
+
+    def _emit(self, req: Request, lane_logits, s: int, l: int,
+              released: set) -> None:
+        """Sample one token for a lane; retire it on EOS / length budget."""
+        tok = self._sample(req, lane_logits)
+        if not req.output:
+            req.first_token_step = self.t
+        req.output.append(tok)
+        self.stats.generated_tokens += 1
+        if (len(req.output) >= req.max_new_tokens or
+                (req.eos_id is not None and tok == req.eos_id)):
+            self.table.release(s, l)
+            self.lane_end[s, l] = -1
+            released.add(s)
+            req.finished_step = self.t
+            self.finished.append(req)
+            self.stats.finished += 1
+
+    def _finish_step(self, mask, released) -> None:
         if self.paged:
             # Free-on-retire: recycle drained slots eagerly so their pages
             # return to the pool now, not at the next admission into them.

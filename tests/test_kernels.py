@@ -105,39 +105,53 @@ def test_flash_long_context_numerics(key):
 
 
 # ---------------------------------------------------------------------------
-# paged-attention decode (gather-from-block-table)
+# paged-attention decode (gather-from-block-table): parameterized sweep of
+# Pallas kernel vs the jnp gather oracle — page size, GQA group width,
+# query-chunk width C, odd pool sizes, ragged page tables.
 # ---------------------------------------------------------------------------
 
-def _paged_case(key, b, h, kvh, hd, pool, ps, mp, *, dtype, seed=0):
+def _paged_case(key, b, h, kvh, hd, pool, ps, mp, c, *, dtype, seed=0):
     """Random pool + block tables: each slot maps a random number of
-    distinct non-trash pages, each page written up to a random length."""
+    distinct non-trash pages, each page written up to a random length; the
+    query is a C-row chunk at consecutive positions (C == 1: plain
+    decode)."""
     ks = jax.random.split(key, 3)
-    q = jax.random.normal(ks[0], (b, 1, h, hd)).astype(dtype)
+    q = jax.random.normal(ks[0], (b, c, h, hd)).astype(dtype)
     k_pages = jax.random.normal(ks[1], (pool, ps, kvh, hd)).astype(dtype)
     v_pages = jax.random.normal(ks[2], (pool, ps, kvh, hd)).astype(dtype)
     rng = np.random.default_rng(seed)
     bt = np.full((b, mp), -1, np.int32)
     pos = np.full((pool, ps), -1, np.int32)
     for i in range(b):
-        n = rng.integers(1, mp + 1)
+        n = rng.integers(1, min(mp, pool - 1) + 1)
         bt[i, :n] = rng.choice(np.arange(1, pool), size=n, replace=False)
         for j, p in enumerate(bt[i, :n]):
             written = rng.integers(1, ps + 1)
             pos[p, :written] = j * ps + np.arange(written)
-    q_pos = jnp.asarray(rng.integers(ps, mp * ps, (b, 1)), jnp.int32)
+    base = rng.integers(ps - 1, mp * ps - c + 1, (b, 1))
+    q_pos = jnp.asarray(base + np.arange(c)[None, :], jnp.int32)
     return q, k_pages, v_pages, jnp.asarray(pos), jnp.asarray(bt), q_pos
 
 
+# (b, h, kvh, hd, pool, ps, mp, c): page_size 4..16, n_rep 1..4, chunk 1..4,
+# pool sizes prime/odd so page ids never line up with slot strides.
+PAGED_SWEEP = [
+    (2, 4, 2, 64, 9, 8, 4, 1),      # GQA 2x, multi-page, plain decode
+    (1, 4, 4, 32, 5, 4, 3, 1),      # MHA, small pages, odd pool
+    (3, 8, 2, 16, 13, 16, 2, 1),    # wide GQA group, prime pool
+    (2, 4, 2, 32, 7, 4, 5, 2),      # chunked queries over small pages
+    (2, 4, 1, 16, 11, 8, 3, 3),     # MQA (n_rep 4), chunk 3
+    (1, 8, 4, 32, 9, 16, 2, 4),     # chunk 4 within one page
+    (2, 2, 2, 48, 13, 2, 6, 2),     # page_size 2: chunk spans pages
+]
+
+
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-@pytest.mark.parametrize("b,h,kvh,hd,pool,ps,mp", [
-    (2, 4, 2, 64, 9, 8, 4),     # GQA, multi-page
-    (1, 4, 4, 32, 5, 4, 3),     # MHA, small pages
-    (3, 8, 2, 16, 12, 16, 2),   # wide GQA group
-])
+@pytest.mark.parametrize("b,h,kvh,hd,pool,ps,mp,c", PAGED_SWEEP)
 @pytest.mark.parametrize("window", [None, 8])
-def test_paged_kernel_allclose(key, b, h, kvh, hd, pool, ps, mp, dtype,
-                               window):
-    args = _paged_case(key, b, h, kvh, hd, pool, ps, mp, dtype=dtype)
+def test_paged_kernel_sweep(key, b, h, kvh, hd, pool, ps, mp, c, dtype,
+                            window):
+    args = _paged_case(key, b, h, kvh, hd, pool, ps, mp, c, dtype=dtype)
     scale = hd ** -0.5
     want = paged_ref.paged_attention(*args, scale=scale, causal=True,
                                      window=window)
