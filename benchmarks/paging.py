@@ -16,6 +16,15 @@ Writes ``results/bench/serving_paged.json`` (the ``paging`` suite of
 (``serving.prefill_chunk``) to ``results/bench/serving_chunked.json``:
 ramp latency — decode steps from admission to a request's first generated
 token — drops to ~ceil(Lp/chunk) while tokens-per-step throughput holds.
+
+``run_preempt`` (the ``preempt`` suite) replays a two-class Poisson trace —
+interactive latency-class arrivals over a grid saturated with long
+batch-class generations — through ``policy="slo"`` with and without
+preempt-and-swap, and writes ``results/bench/serving_preempt.json``:
+latency-class TTFT collapses when an arriving request can park a batch slot
+instead of queueing behind its generation, and a controlled victim scenario
+checks the resumed slot's continuation tokens are bitwise-identical to an
+un-preempted run (both paged and contiguous modes).
 """
 from __future__ import annotations
 
@@ -31,7 +40,8 @@ from repro.models import Backbone
 from repro.serving.engine import Engine
 from repro.serving.kvcache import cache_bytes, paged_cache_bytes
 from repro.serving.paging import pages_for
-from repro.serving.scheduler import ContinuousScheduler, poisson_trace
+from repro.serving.scheduler import (ContinuousScheduler, Request,
+                                     poisson_trace)
 
 
 def _fresh(reqs):
@@ -172,5 +182,130 @@ def run(*, n=4, batch=2, num_requests=16, rate=2.0, prompt_len=4,
     return payload
 
 
+def _two_class_trace(*, n_batch, n_latency, rate, prompt_len, batch_gen,
+                     latency_gen, vocab, seed):
+    """Two independent Poisson processes: long batch-class generations
+    saturate the grid; short latency-class requests arrive on top of them
+    (offset past the first batch wave, so they always find a full grid)."""
+    batch = poisson_trace(n_batch, rate=rate, prompt_len=prompt_len,
+                          gen_len=batch_gen, vocab=vocab, seed=seed,
+                          slo_mix=1.0, slo_names=("batch", "batch"))
+    for r in batch:
+        # Clip the geometric short tail: every batch generation is long
+        # enough that an un-preempted latency arrival really stalls.
+        r.max_new_tokens = max(r.max_new_tokens, batch_gen)
+    lat = poisson_trace(n_latency, rate=rate / 4, prompt_len=prompt_len,
+                        gen_len=latency_gen, vocab=vocab, seed=seed + 1,
+                        slo_mix=1.0, slo_names=("latency", "latency"))
+    offset = 2 + max(r.arrival for r in batch)
+    for r in lat:
+        r.rid += n_batch
+        r.arrival += offset
+        r.max_new_tokens = min(r.max_new_tokens, latency_gen)
+    return batch + lat
+
+
+def _ttft(sched, slo: str) -> dict:
+    tt = [q.ttft for q in sched.finished
+          if sched.slo.resolve(q.slo) == slo and q.ttft >= 0]
+    return {"mean": round(float(np.mean(tt)), 2), "p50": int(np.median(tt)),
+            "max": int(max(tt))} if tt else {}
+
+
+def run_preempt(*, n=4, batch=2, n_batch=8, n_latency=4, rate=2.0,
+                prompt_len=3, batch_gen=24, latency_gen=3, page_size=8,
+                seed=0):
+    common.banner("Serving — preempt-and-swap (SLO classes)")
+    cfg = common.micro_config(n)
+    params = Backbone.init(jax.random.PRNGKey(0), cfg)
+    max_total = prompt_len * 2 + 4 * batch_gen + 1
+    trace = _two_class_trace(
+        n_batch=n_batch, n_latency=n_latency, rate=rate,
+        prompt_len=prompt_len, batch_gen=batch_gen, latency_gen=latency_gen,
+        vocab=cfg.vocab, seed=seed)
+
+    def build(paged, preempt):
+        serving = ServingConfig(paged=paged, page_size=page_size,
+                                policy="slo", preempt=preempt)
+        eng = Engine(params, dataclasses.replace(cfg, serving=serving),
+                     batch=batch, max_len=max_total)
+        return ContinuousScheduler(eng)
+
+    payload = {"config": {"n": n, "batch": batch, "n_batch": n_batch,
+                          "n_latency": n_latency, "rate": rate,
+                          "prompt_len": prompt_len, "batch_gen": batch_gen,
+                          "latency_gen": latency_gen,
+                          "page_size": page_size, "seed": seed,
+                          "arch": cfg.name}}
+    for mode, paged in (("contiguous", False), ("paged", True)):
+        base = build(paged, preempt=False)
+        t0 = time.time()
+        stats_b = base.run(_fresh(trace))
+        dt_b = time.time() - t0
+        pre = build(paged, preempt=True)
+        t0 = time.time()
+        stats_p = pre.run(_fresh(trace))
+        dt_p = time.time() - t0
+        assert stats_b.finished == stats_p.finished == len(trace)
+        assert stats_p.preemptions > 0, \
+            f"{mode}: the saturated trace triggered no preemption"
+        base_lat, pre_lat = _ttft(base, "latency"), _ttft(pre, "latency")
+        assert pre_lat["mean"] < base_lat["mean"], \
+            f"{mode}: preemption did not improve latency-class TTFT " \
+            f"({pre_lat} vs {base_lat})"
+
+        # Controlled victim scenario: the same batch-class group run with
+        # nothing else (its un-preempted run) and run preempted by a
+        # latency burst — continuation tokens must be bitwise-identical.
+        rng = np.random.default_rng(seed)
+        victims = [Request(rid=i,
+                           prompt=rng.integers(0, cfg.vocab,
+                                               prompt_len).astype(np.int32),
+                           max_new_tokens=batch_gen, slo="batch")
+                   for i in range(batch * max(1, cfg.mux.n))]
+        burst = [Request(rid=100 + i,
+                         prompt=rng.integers(0, cfg.vocab,
+                                             prompt_len).astype(np.int32),
+                         max_new_tokens=latency_gen, arrival=3,
+                         slo="latency") for i in range(2)]
+        solo = build(paged, preempt=False)
+        solo.run([r.fresh() for r in victims])
+        ref = {q.rid: list(q.output) for q in solo.finished}
+        mixed = build(paged, preempt=True)
+        stats_m = mixed.run([r.fresh() for r in victims + burst])
+        got = {q.rid: list(q.output) for q in mixed.finished}
+        assert stats_m.preemptions > 0
+        bitwise = all(got[r.rid] == ref[r.rid] for r in victims)
+        assert bitwise, f"{mode}: resumed victim diverged from its " \
+                        f"un-preempted run"
+
+        payload[mode] = {
+            "no_preempt": {
+                "decode_steps": stats_b.decode_steps,
+                "tok_per_s": round(stats_b.generated_tokens / dt_b, 1),
+                "latency_ttft": base_lat,
+                "batch_ttft": _ttft(base, "batch"),
+                "per_class": stats_b.per_class,
+            },
+            "preempt": {
+                "decode_steps": stats_p.decode_steps,
+                "tok_per_s": round(stats_p.generated_tokens / dt_p, 1),
+                "latency_ttft": pre_lat,
+                "batch_ttft": _ttft(pre, "batch"),
+                "preemptions": stats_p.preemptions,
+                "resumes": stats_p.resumes,
+                "per_class": stats_p.per_class,
+            },
+            "victim_bitwise_identical": bitwise,
+        }
+        print(f"  {mode:>10}: latency TTFT mean {base_lat['mean']} -> "
+              f"{pre_lat['mean']} steps ({stats_p.preemptions} preemptions, "
+              f"{stats_p.resumes} resumes), victims bitwise-identical: "
+              f"{bitwise}")
+    common.save("serving_preempt", payload)
+    return payload
+
+
 if __name__ == "__main__":
     run()
+    run_preempt()

@@ -30,6 +30,7 @@ SUITES = {
     "roofline": roofline.run,         # §Roofline table from dry-run records
     "serving": throughput_vs_n.run_continuous,  # continuous vs static batching
     "paging": paging.run,             # paged vs contiguous KV cache
+    "preempt": paging.run_preempt,    # preempt-and-swap SLO classes
 }
 
 

@@ -105,6 +105,23 @@ class ServingConfig:
                               # decode one token per step, their extra chunk
                               # rows masked).  1 = today's one-token ramp,
                               # bit-for-bit unchanged.
+    policy: str = "fifo"      # admission policy name (serving/policies.py):
+                              # fifo | priority | slo, or any registered
+                              # custom AdmissionPolicy
+    preempt: bool = False     # preempt-and-swap: an admissible request that
+                              # outranks a live slot (per the eviction
+                              # policy paired with ``policy``) parks that
+                              # slot's lanes in the swap ledger and takes
+                              # its place; parked lanes resume later with
+                              # bitwise-identical continuations.  Needs a
+                              # ranked policy (slo / priority).
+    slo_classes: tuple = (("latency", 8), ("batch", 64))
+                              # ordered (name, ttft_deadline_steps) pairs
+                              # for policy="slo": position is rank (index 0
+                              # outranks the rest); deadline is the TTFT
+                              # target in decode steps that EDF admission
+                              # orders by and reports attainment against.
+                              # Unclassed requests take the last class.
 
     def __post_init__(self):
         if self.page_size < 1:
@@ -114,6 +131,24 @@ class ServingConfig:
         if self.prefill_chunk < 1:
             raise ValueError(
                 f"prefill_chunk must be >= 1, got {self.prefill_chunk}")
+        if not self.policy or not isinstance(self.policy, str):
+            raise ValueError(
+                f"policy must be a registered admission-policy name, got "
+                f"{self.policy!r}")
+        if not self.slo_classes:
+            raise ValueError("slo_classes needs at least one (name, "
+                             "deadline) pair")
+        names = [name for name, _ in self.slo_classes]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate SLO class names in {names}")
+        for name, deadline in self.slo_classes:
+            if not name or not isinstance(name, str):
+                raise ValueError(f"SLO class name must be a non-empty "
+                                 f"string, got {name!r}")
+            if int(deadline) < 1:
+                raise ValueError(
+                    f"SLO class {name!r} deadline must be >= 1 step, got "
+                    f"{deadline}")
 
 
 # ---------------------------------------------------------------------------

@@ -25,6 +25,15 @@ the slot's other lanes keep decoding one token per step):
 
     PYTHONPATH=src python -m repro.launch.serve --smoke --workload poisson \
         --paged --prefill-chunk 4 --gen 8
+
+SLO classes + preempt-and-swap (earliest-deadline-first admission over a
+two-class trace; a latency-class request arriving on a full grid parks a
+batch-class slot in the swap ledger — the victim resumes later with
+bitwise-identical continuation tokens — and ``--report`` prints TTFT
+percentiles and per-class deadline attainment):
+
+    PYTHONPATH=src python -m repro.launch.serve --smoke --workload poisson \
+        --paged --policy slo --preempt --slo-mix 0.25 --report --gen 8
 """
 import argparse
 import os
@@ -65,7 +74,7 @@ def _run_workload(args, cfg, mesh, mi, jax, Backbone, Engine):
         trace = poisson_trace(
             args.num_requests, rate=args.rate, prompt_len=args.prompt_len,
             gen_len=args.gen, vocab=cfg.vocab, max_total=max_total,
-            seed=args.seed)
+            seed=args.seed, slo_mix=args.slo_mix)
         t0 = time.time()
         stats = sched.run(trace)
         dt = time.time() - t0
@@ -76,17 +85,32 @@ def _run_workload(args, cfg, mesh, mi, jax, Backbone, Engine):
           + (f", paged (page_size={cfg.serving.page_size})"
              if cfg.serving.paged else "")
           + (f", prefill_chunk={cfg.serving.prefill_chunk}"
-             if cfg.serving.prefill_chunk > 1 else ""))
+             if cfg.serving.prefill_chunk > 1 else "")
+          + (f", policy={cfg.serving.policy}" if cfg.serving.policy != "fifo"
+             else "")
+          + (", preempt" if cfg.serving.preempt else ""))
     print(f"[serve] continuous: {stats.decode_steps} decode steps, "
           f"{stats.generated_tokens} tokens in {dt:.2f}s "
           f"({stats.generated_tokens / max(dt, 1e-9):.0f} tok/s), "
           f"occupancy {stats.mean_occupancy:.2f}, "
           f"{stats.slot_resets} slot resets")
+    if stats.preemptions or stats.resumes:
+        print(f"[serve] preempt-and-swap: {stats.preemptions} slots parked, "
+              f"{stats.resumes} resumed")
     ramp = [q.ramp_latency for q in sched.finished]
     if ramp:
         import numpy as _np
         print(f"[serve] ramp: mean {_np.mean(ramp):.2f} steps from admission "
               f"to first token (max {max(ramp)})")
+    if args.report:
+        print(f"[serve] ttft: p50 {stats.ttft_p50:.1f} / p99 "
+              f"{stats.ttft_p99:.1f} steps from arrival to first token")
+        for name, c in stats.per_class.items():
+            print(f"[serve]   {name:>8}: {c['finished']} finished, "
+                  f"ttft p50 {c['ttft_p50']:.1f} p99 {c['ttft_p99']:.1f} "
+                  f"(deadline {c['ttft_deadline']}, hit "
+                  f"{100 * c['deadline_hit_rate']:.0f}%), "
+                  f"{c['preempted']} preemptions")
     if cfg.serving.paged:
         table = sched.allocator.table
         print(f"[serve] pool: peak {table.peak_in_use}/{table.usable_pages} "
@@ -134,6 +158,20 @@ def main(argv=None):
     ap.add_argument("--prefill-chunk", type=int, default=1,
                     help="prompt tokens fed per decode step while a lane "
                          "ramps (1 = classic one-token ramp)")
+    # policy-driven serving core (serving/policies.py)
+    ap.add_argument("--policy", default="fifo",
+                    help="admission policy: fifo | priority | slo (or any "
+                         "registered custom policy name)")
+    ap.add_argument("--preempt", action="store_true",
+                    help="preempt-and-swap: an outranking request parks a "
+                         "victim slot in the swap ledger; the victim "
+                         "resumes later, bitwise-identical")
+    ap.add_argument("--slo-mix", type=float, default=0.0,
+                    help="fraction of trace requests tagged latency-class "
+                         "(rest batch-class; 0 = unclassed)")
+    ap.add_argument("--report", action="store_true",
+                    help="print TTFT percentiles and per-SLO-class "
+                         "completion stats after the run")
     args = ap.parse_args(argv)
     workload = args.workload == "poisson"
     if args.batch is None:
@@ -165,13 +203,15 @@ def main(argv=None):
 
     getter = get_smoke_config if args.smoke else get_config
     cfg = getter(args.arch, mux_n=args.mux_n)
-    if args.paged or args.prefill_chunk > 1:
+    if (args.paged or args.prefill_chunk > 1 or args.policy != "fifo"
+            or args.preempt):
         import dataclasses
         from repro.configs.base import ServingConfig
         cfg = dataclasses.replace(cfg, serving=ServingConfig(
             paged=args.paged, page_size=args.page_size,
             pool_pages=args.pool_pages,
-            prefill_chunk=args.prefill_chunk))
+            prefill_chunk=args.prefill_chunk,
+            policy=args.policy, preempt=args.preempt))
     print(f"[serve] {cfg.name} N={cfg.mux.n} on mesh "
           f"{dict(zip(mesh.axis_names, mesh.devices.shape))}")
 

@@ -2,18 +2,25 @@ from repro.serving.engine import Engine, ServeState
 from repro.serving.kvcache import (KVSlotAllocator, cache_bytes,
                                    cache_bytes_per_stream, paged_cache_bytes,
                                    paged_cache_bytes_per_stream, pytree_bytes)
-from repro.serving.paging import (PagedKVSlotAllocator, PageTable, pages_for)
+from repro.serving.paging import (PagedKVSlotAllocator, PagedPark, PageTable,
+                                  pages_for)
+from repro.serving.policies import (AdmissionPolicy, EvictionPolicy,
+                                    SamplingPolicy, SloClasses,
+                                    register_admission, register_eviction,
+                                    register_sampling)
 from repro.serving.scheduler import (ContinuousScheduler, Request,
                                      SchedulerStats, poisson_trace,
                                      static_batch_steps)
-from repro.serving.slots import SlotTable
+from repro.serving.slots import ParkedGroup, SlotTable, SwapLedger
 
 __all__ = [
     "Engine", "ServeState",
     "KVSlotAllocator", "cache_bytes", "cache_bytes_per_stream",
     "paged_cache_bytes", "paged_cache_bytes_per_stream", "pytree_bytes",
-    "PagedKVSlotAllocator", "PageTable", "pages_for",
+    "PagedKVSlotAllocator", "PagedPark", "PageTable", "pages_for",
+    "AdmissionPolicy", "EvictionPolicy", "SamplingPolicy", "SloClasses",
+    "register_admission", "register_eviction", "register_sampling",
     "ContinuousScheduler", "Request", "SchedulerStats", "poisson_trace",
     "static_batch_steps",
-    "SlotTable",
+    "SlotTable", "ParkedGroup", "SwapLedger",
 ]

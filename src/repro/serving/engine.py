@@ -79,6 +79,7 @@ class Engine:
                 raise ValueError(
                     f"serving.prefill_chunk={chunk} exceeds the smallest "
                     f"cache ring ({slots} slots); shrink the chunk")
+        self._validate_serving_policy(cfg)
         self._prefill = jax.jit(self._prefill_impl) if jit \
             else self._prefill_impl
         # Donate the cache: the decode step aliases the KV buffers instead of
@@ -89,6 +90,18 @@ class Engine:
         self._prime = jax.jit(self._prime_impl,
                               static_argnames=("prime_len",)) if jit \
             else self._prime_impl
+
+    @staticmethod
+    def _validate_serving_policy(cfg: ModelConfig) -> None:
+        """Fail fast on a typo'd serving policy name at engine
+        construction, before params and caches build.  The preempt /
+        eviction pairing is *not* checked here: the scheduler accepts an
+        explicit ``eviction=`` override (e.g. fifo admission + priority
+        eviction), so only it can tell whether ``preempt=True`` is
+        satisfiable."""
+        from repro.serving import policies as serving_policies
+        slo = serving_policies.SloClasses(cfg.serving.slo_classes)
+        serving_policies.resolve("admission", cfg.serving.policy, slo)
 
     # -- impl -------------------------------------------------------------------
 

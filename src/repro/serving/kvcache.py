@@ -136,6 +136,39 @@ def _masked_restore(leaf, template, mask, slot_axis: int):
     return jnp.where(m, template, leaf)
 
 
+# Cache pytree sections and the axis their leaves carry the slot dim on.
+CACHE_SECTIONS = (("head", 0), ("tail", 0), ("blocks", 1))
+
+
+def snapshot_cache_slot(cache, slot):
+    """Copy one slot's slice of a ``Backbone.init_cache``-shaped pytree —
+    the park half of preempt-and-swap.  ``slot`` is a traced scalar, so one
+    jitted trace serves every slot; slices are fresh buffers, safe to hold
+    across donated decode steps."""
+    out = {}
+    for section, axis in CACHE_SECTIONS:
+        out[section] = jax.tree.map(
+            lambda leaf, a=axis: jax.lax.dynamic_index_in_dim(
+                leaf, slot, axis=a, keepdims=True),
+            cache[section])
+    return out
+
+
+def restore_cache_slot(cache, snapshot, slot):
+    """Scatter a ``snapshot_cache_slot`` payload back into ``slot`` — the
+    resume half.  Every other slot passes through bit-for-bit; the target
+    slot takes the parked state exactly, so a resumed group continues from
+    the same cache it was parked with (any empty slot works: backbone
+    batch rows are independent)."""
+    out = dict(cache)
+    for section, axis in CACHE_SECTIONS:
+        out[section] = jax.tree.map(
+            lambda leaf, snap, a=axis: jax.lax.dynamic_update_index_in_dim(
+                leaf, snap.astype(leaf.dtype), slot, axis=a),
+            cache[section], snapshot[section])
+    return out
+
+
 def reset_cache_slots(cache, template, slot_mask):
     """Restore masked slots of a ``Backbone.init_cache``-shaped pytree to
     ``template`` values; unmasked slots pass through bit-for-bit.
@@ -181,8 +214,12 @@ class KVSlotAllocator:
         self.cache = jax.tree.map(jnp.copy, self.template)
         if jit:
             self._reset = jax.jit(reset_cache_slots, donate_argnums=(0,))
+            self._snapshot = jax.jit(snapshot_cache_slot)
+            self._restore = jax.jit(restore_cache_slot, donate_argnums=(0,))
         else:
             self._reset = reset_cache_slots
+            self._snapshot = snapshot_cache_slot
+            self._restore = restore_cache_slot
 
     def adopt(self, cache) -> None:
         """Take ownership of the post-step cache pytree."""
@@ -200,3 +237,16 @@ class KVSlotAllocator:
     def slot_bytes(self) -> int:
         """Actual bytes of one slot's share of the live cache."""
         return pytree_bytes(self.cache) // max(1, self.batch)
+
+    def park_slot(self, slot: int):
+        """Preempt-and-swap, contiguous flavour: snapshot the whole slot
+        region (every layer's slice — there is no block-table row to detach)
+        and return it as the swap-ledger payload.  The caller then resets
+        the slot for its next occupant; the snapshot holds the victim's
+        exact cache until ``resume_slot``."""
+        return self._snapshot(self.cache, jnp.int32(slot))
+
+    def resume_slot(self, slot: int, payload) -> None:
+        """Restore a parked snapshot into (any) empty ``slot``: the resumed
+        group's decode continues bit-for-bit from where it was parked."""
+        self.cache = self._restore(self.cache, payload, jnp.int32(slot))

@@ -32,6 +32,7 @@ long-running slot never blocks admission as long as the pool has room.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Optional
 
 import jax
@@ -122,6 +123,40 @@ class PageTable:
         self.n_allocated[slot] = min(self.n_allocated[slot], keep)
         return freed
 
+    def detach_row(self, slot: int) -> tuple[np.ndarray, int]:
+        """Park the slot's page row (preempt-and-swap): the pages leave the
+        table without being freed — the caller's swap ledger owns them until
+        ``attach_row`` — and the slot shows empty.  Host-side O(1): no page
+        content moves."""
+        row = self.rows[slot].copy()
+        n = int(self.n_allocated[slot])
+        self.rows[slot] = -1
+        self.n_allocated[slot] = 0
+        return row, n
+
+    def attach_row(self, slot: int, row: np.ndarray, n_pages: int) -> None:
+        """Reattach a detached row into an empty ``slot`` (resume): the
+        parked pages come back exactly as parked, on whichever slot index
+        was free."""
+        if self.n_allocated[slot] or (self.rows[slot] >= 0).any():
+            raise ValueError(
+                f"slot {slot} still holds pages; free it before attaching "
+                f"a parked row")
+        self.rows[slot] = row
+        self.n_allocated[slot] = n_pages
+
+
+@dataclasses.dataclass
+class PagedPark:
+    """Parked cache state of one preempted slot (the swap-ledger payload
+    under paging): the detached block-table row — its pool pages stay
+    resident, untouched, until resumption — plus a snapshot of the
+    ineligible contiguous layers' slot slice (None when every layer
+    pages)."""
+    row: np.ndarray
+    n_pages: int
+    snapshot: Any = None
+
 
 class PagedKVSlotAllocator:
     """Paged counterpart of ``KVSlotAllocator``: owns the pooled decode
@@ -185,6 +220,12 @@ class PagedKVSlotAllocator:
         # cache's width — pad them out (positions beyond the prime are
         # simply unwritten).
         template = self._expand_template(template)
+        # Primed prefix content reshaped to page chunks, kept resident: the
+        # construction-time import scatters every slot's prefix pages from
+        # it, and ``park_slot`` re-imports one slot's worth when
+        # reprovisioning a freed slot (B x prefix_len per paged layer —
+        # cheap next to the pool).
+        self._prefix_chunks = self._prefix_chunks_from(template)
         # Reset template: contiguous layers only — paged layers reset via
         # the page table, so their (B, max_len) template slices are dropped
         # (the full contiguous pytree would shadow the pool's memory win).
@@ -193,6 +234,8 @@ class PagedKVSlotAllocator:
                    else jax.tree.map(jnp.copy, layer))
                   for i, layer in enumerate(template[sec])]
             for sec, _ in _SECTIONS}
+        self._has_contiguous = any(
+            not p for flags in self._paged.values() for p in flags)
 
         self._jit = jit
         maybe_jit = (lambda f, **kw: jax.jit(f, **kw)) if jit \
@@ -201,6 +244,10 @@ class PagedKVSlotAllocator:
                                      donate_argnums=(0,))
         self._reset = maybe_jit(self._reset_impl, donate_argnums=(0,))
         self._import = maybe_jit(self._import_impl, donate_argnums=(0,))
+        self._import_slot = maybe_jit(self._import_slot_impl,
+                                      donate_argnums=(0,))
+        self._snapshot = maybe_jit(self._snapshot_impl)
+        self._restore = maybe_jit(self._restore_impl, donate_argnums=(0,))
 
         # Pre-allocate each slot's prefix pages and scatter the primed
         # prefix K/V into them (plus the contiguous leaves wholesale).
@@ -208,7 +255,8 @@ class PagedKVSlotAllocator:
             for j in range(self.n_prefix_pages):
                 self.table.allocate(s, j)
         prefix_rows = jnp.asarray(self.table.rows[:, :self.n_prefix_pages])
-        self.cache = self._import(self.cache, template, prefix_rows)
+        self.cache = self._import(self.cache, template,
+                                  self._prefix_chunks, prefix_rows)
         # The last prefix page of each slot (partial iff prefix % ps != 0):
         # recycling must re-invalidate its tail, which the drained
         # generation overwrote.
@@ -253,25 +301,23 @@ class PagedKVSlotAllocator:
             out[sec][i] = new
         return out
 
-    # -- jitted pytree ops ----------------------------------------------------
-
-    def _import_impl(self, cache, template, prefix_rows):
-        """Scatter the contiguous template's prefix region into the
-        pre-allocated prefix pages; copy contiguous layers through."""
+    def _prefix_chunks_from(self, template):
+        """Primed prefix content of every paged layer, reshaped slot-major
+        into page chunks — k/v/pos each ``(B, npp, ps, ...)`` (blocks:
+        ``(G, B, npp, ps, ...)``).  ``pos`` is padded with the -1 sentinel
+        past the prefix, so scattering a chunk into freshly allocated pages
+        also invalidates whatever their previous owner wrote."""
         ps = self.page_size
         npp = self.n_prefix_pages
         width = npp * ps
-        out = {sec: list(cache[sec]) for sec, _ in _SECTIONS}
-        for sec, axis, i, layer, paged in self._walk(cache):
-            tmpl = template[sec][i]
+        chunks: dict[str, dict] = {}
+        if npp == 0:
+            return chunks
+        for sec, axis, i, layer, paged in self._walk(self.cache):
             if not paged:
-                # Real copies: the live cache is donated into the jitted
-                # step and must never alias the template's buffers.
-                out[sec][i] = jax.tree.map(jnp.copy, tmpl)
                 continue
-            if npp == 0:
-                continue
-            new_layer = dict(layer)
+            tmpl = template[sec][i]
+            ch = {}
             for pool_key, tmpl_key in (("k_pages", "k"), ("v_pages", "v"),
                                        ("pos", "pos")):
                 src = tmpl[tmpl_key]            # (B, S, ...) or (G, B, S, ...)
@@ -287,12 +333,84 @@ class PagedKVSlotAllocator:
                     src = jnp.pad(src, cfgpad, constant_values=fill)
                 shape = (src.shape[:seq_ax] + (npp, ps) +
                          src.shape[seq_ax + 1:])
-                chunk = src.reshape(shape).astype(pool.dtype)
+                ch[pool_key] = src.reshape(shape).astype(pool.dtype)
+            chunks[f"{sec}/{i}"] = ch
+        return chunks
+
+    # -- jitted pytree ops ----------------------------------------------------
+
+    def _import_impl(self, cache, template, chunks, prefix_rows):
+        """Scatter the primed prefix chunks into every slot's pre-allocated
+        prefix pages; copy contiguous layers through from the template."""
+        out = {sec: list(cache[sec]) for sec, _ in _SECTIONS}
+        for sec, axis, i, layer, paged in self._walk(cache):
+            if not paged:
+                # Real copies: the live cache is donated into the jitted
+                # step and must never alias the template's buffers.
+                out[sec][i] = jax.tree.map(jnp.copy, template[sec][i])
+                continue
+            key = f"{sec}/{i}"
+            if key not in chunks:
+                continue
+            new_layer = dict(layer)
+            for pool_key in ("k_pages", "v_pages", "pos"):
+                pool = layer[pool_key]
+                chunk = chunks[key][pool_key]
                 if axis == 0:                   # head/tail: pool axis 0
                     new_layer[pool_key] = pool.at[prefix_rows].set(chunk)
                 else:                           # blocks: (G, P, ...) pool
                     new_layer[pool_key] = pool.at[:, prefix_rows].set(chunk)
             out[sec][i] = new_layer
+        return out
+
+    def _import_slot_impl(self, cache, chunks, rows, slot):
+        """Scatter one slot's primed prefix chunk into freshly allocated
+        prefix pages (``rows``, the park-reprovision path).  The chunk's
+        ``pos`` covers the whole page region (-1 past the prefix), so the
+        pages' stale previous content is invalidated by the same write."""
+        out = {sec: list(cache[sec]) for sec, _ in _SECTIONS}
+        for sec, axis, i, layer, paged in self._walk(cache):
+            key = f"{sec}/{i}"
+            if not paged or key not in chunks:
+                continue
+            new_layer = dict(layer)
+            for pool_key in ("k_pages", "v_pages", "pos"):
+                pool = layer[pool_key]
+                ch = jax.lax.dynamic_index_in_dim(
+                    chunks[key][pool_key], slot, axis=axis, keepdims=False)
+                if axis == 0:
+                    new_layer[pool_key] = pool.at[rows].set(ch)
+                else:
+                    new_layer[pool_key] = pool.at[:, rows].set(ch)
+            out[sec][i] = new_layer
+        return out
+
+    def _snapshot_impl(self, cache, slot):
+        """Copy the ineligible contiguous layers' slice of ``slot`` (the
+        park payload half that block tables cannot carry).  ``slot`` is
+        traced — one compilation serves every slot."""
+        out = {}
+        for sec, axis, i, layer, paged in self._walk(cache):
+            if paged:
+                continue
+            out[f"{sec}/{i}"] = jax.tree.map(
+                lambda leaf, a=axis: jax.lax.dynamic_index_in_dim(
+                    leaf, slot, axis=a, keepdims=True),
+                layer)
+        return out
+
+    def _restore_impl(self, cache, snap, slot):
+        """Scatter a park snapshot back into ``slot``'s contiguous layers;
+        every other slot passes through bit-for-bit."""
+        out = {sec: list(cache[sec]) for sec, _ in _SECTIONS}
+        for sec, axis, i, layer, paged in self._walk(cache):
+            key = f"{sec}/{i}"
+            if paged or key not in snap:
+                continue
+            out[sec][i] = jax.tree.map(
+                lambda leaf, s, a=axis: jax.lax.dynamic_update_index_in_dim(
+                    leaf, s.astype(leaf.dtype), slot, axis=a),
+                layer, snap[key])
         return out
 
     def _invalidate_impl(self, cache, page_ids):
@@ -392,6 +510,55 @@ class PagedKVSlotAllocator:
             self.table.free_slot(int(s), keep=self.n_prefix_pages)
         self.cache = self._reset(self.cache, self.template,
                                  jnp.asarray(mask), self._partial_pages)
+        self._device_table = None
+
+    # -- preempt-and-swap ------------------------------------------------------
+
+    def _refresh_partial_pages(self) -> None:
+        """Re-derive the per-slot partial-prefix-page ids after a park or
+        resume changed a slot's prefix row (empty rows map to the trash
+        page — invalidating its tail is a no-op by construction)."""
+        if not (self.n_prefix_pages and self._partial_off):
+            return
+        last = self.table.rows[:, self.n_prefix_pages - 1]
+        self._partial_pages = jnp.asarray(
+            np.where(last >= 0, last, TRASH_PAGE).astype(np.int32))
+
+    def park_slot(self, slot: int) -> PagedPark:
+        """Preempt-and-swap, paged flavour: detach the slot's block-table
+        row — its pages stay resident in the pool, owned by the returned
+        payload, with zero KV copies — and snapshot the ineligible
+        contiguous layers' slot slice.  The freed slot is reprovisioned
+        with fresh prefix pages (content re-imported from the primed
+        prefix chunks) so its next occupant admits at ``prefix_len``
+        exactly like a recycled slot.  Needs ``free_pages >=
+        n_prefix_pages`` for the reprovision — the scheduler checks before
+        preempting."""
+        row, n = self.table.detach_row(slot)
+        snap = self._snapshot(self.cache, jnp.int32(slot)) \
+            if self._has_contiguous else None
+        if self.n_prefix_pages:
+            for j in range(self.n_prefix_pages):
+                self.table.allocate(slot, j)
+            rows = jnp.asarray(self.table.rows[slot, :self.n_prefix_pages])
+            self.cache = self._import_slot(self.cache, self._prefix_chunks,
+                                           rows, jnp.int32(slot))
+            self._refresh_partial_pages()
+        self._device_table = None
+        return PagedPark(row=row, n_pages=n, snapshot=snap)
+
+    def resume_slot(self, slot: int, payload: PagedPark) -> None:
+        """Reattach a parked row into (any) drained slot: the slot's fresh
+        prefix pages return to the free list and the parked pages come
+        back exactly as parked — a host-side row swap.  Ineligible
+        contiguous layers restore from the park snapshot, so the resumed
+        group's decode continues bit-for-bit."""
+        self.table.free_slot(slot, keep=0)
+        self.table.attach_row(slot, payload.row, payload.n_pages)
+        if payload.snapshot is not None:
+            self.cache = self._restore(self.cache, payload.snapshot,
+                                       jnp.int32(slot))
+        self._refresh_partial_pages()
         self._device_table = None
 
     # -- accounting ------------------------------------------------------------

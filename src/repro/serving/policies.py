@@ -1,0 +1,390 @@
+"""Serving policies: pluggable admission / eviction / sampling.
+
+PR 2-4 grew ``ContinuousScheduler`` into a monolith with FIFO/priority
+ordering hard-wired into ``_admit`` and no way to evict a lane.  This module
+factors the three decision surfaces into protocols resolved by name from a
+registry (mirroring ``repro.core.strategies``), so the scheduler only
+orchestrates step execution:
+
+  * ``AdmissionPolicy`` — which queued request is offered the next free
+    lane.  ``fifo`` preserves strict head-of-line order; ``priority`` serves
+    the highest ``Request.priority`` among arrived requests; ``slo`` is
+    earliest-deadline-first over SLO classes (``ServingConfig.slo_classes``
+    maps class name -> TTFT deadline in decode steps; class order is rank —
+    earlier entries outrank later ones, unclassed requests take the last).
+  * ``EvictionPolicy`` — which live slot yields when an admissible request
+    outranks it and ``preempt`` is on (the victim's lanes park in the swap
+    ledger and resume later, see ``serving/slots.py``).  ``none`` never
+    preempts; ``priority`` ranks by ``Request.priority``; ``slo`` ranks by
+    SLO class.  Both pick the most-preemptible slot (worst best-lane rank),
+    then the youngest (least progress lost), and never evict a slot holding
+    a peer- or higher-ranked lane.
+  * ``SamplingPolicy`` — per-lane next-token selection.  ``lane`` is the
+    PR 3 behaviour: exact argmax at temperature 0 (the bit-for-bit default
+    path), seeded per-request Gumbel-max otherwise.
+
+Authoring a policy is the same three steps as a mux strategy: subclass,
+``@register_*("name")``, pass the name (``ServingConfig.policy``) or an
+instance to ``ContinuousScheduler``.  Admission policies are stateful (they
+own the queue) and are instantiated per scheduler; eviction/sampling
+implementations must be stateless.
+"""
+from __future__ import annotations
+
+import collections
+import heapq
+from typing import Callable, Optional, Sequence, TypeVar
+
+import numpy as np
+
+T = TypeVar("T", bound=type)
+
+_ADMISSION: dict[str, type] = {}
+_EVICTION: dict[str, type] = {}
+_SAMPLING: dict[str, type] = {}
+
+
+def _register(table: dict[str, type], kind: str, name: str):
+    def deco(cls: T) -> T:
+        if name in table:
+            raise ValueError(
+                f"{kind} policy {name!r} already registered "
+                f"({table[name].__name__}); unregister first to replace it")
+        cls.name = name
+        table[name] = cls
+        return cls
+    return deco
+
+
+def register_admission(name: str) -> Callable[[T], T]:
+    """Class decorator: register an AdmissionPolicy under ``name``."""
+    return _register(_ADMISSION, "admission", name)
+
+
+def register_eviction(name: str) -> Callable[[T], T]:
+    """Class decorator: register an EvictionPolicy under ``name``."""
+    return _register(_EVICTION, "eviction", name)
+
+
+def register_sampling(name: str) -> Callable[[T], T]:
+    """Class decorator: register a SamplingPolicy under ``name``."""
+    return _register(_SAMPLING, "sampling", name)
+
+
+def _get(table: dict[str, type], kind: str, name: str) -> type:
+    try:
+        return table[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown {kind} policy {name!r}; registered: "
+            f"{sorted(table)}") from None
+
+
+def get_admission(name: str) -> type:
+    return _get(_ADMISSION, "admission", name)
+
+
+def get_eviction(name: str) -> type:
+    return _get(_EVICTION, "eviction", name)
+
+
+def get_sampling(name: str) -> type:
+    return _get(_SAMPLING, "sampling", name)
+
+
+def list_admission() -> list[str]:
+    return sorted(_ADMISSION)
+
+
+def list_eviction() -> list[str]:
+    return sorted(_EVICTION)
+
+
+def list_sampling() -> list[str]:
+    return sorted(_SAMPLING)
+
+
+def unregister_admission(name: str) -> None:
+    _ADMISSION.pop(name, None)
+
+
+def unregister_eviction(name: str) -> None:
+    _EVICTION.pop(name, None)
+
+
+def unregister_sampling(name: str) -> None:
+    _SAMPLING.pop(name, None)
+
+
+# ---------------------------------------------------------------------------
+# SLO classes
+# ---------------------------------------------------------------------------
+
+class SloClasses:
+    """Ordered SLO classes from ``ServingConfig.slo_classes``:
+    ``((name, ttft_deadline_steps), ...)``.  Position is rank — index 0
+    outranks everything after it.  Unknown / empty class names resolve to
+    the last (lowest) class, so unclassed requests are best-effort batch."""
+
+    def __init__(self, classes: Sequence[tuple]):
+        self.names = tuple(name for name, _ in classes)
+        self.deadlines = {name: int(d) for name, d in classes}
+        self._rank = {name: i for i, name in enumerate(self.names)}
+
+    def resolve(self, slo: str) -> str:
+        return slo if slo in self._rank else self.names[-1]
+
+    def rank(self, slo: str) -> int:
+        """0 = highest class; unknown names take the lowest rank."""
+        return self._rank[self.resolve(slo)]
+
+    def deadline(self, slo: str) -> int:
+        """TTFT deadline (scheduler steps from arrival) for the class."""
+        return self.deadlines[self.resolve(slo)]
+
+
+# ---------------------------------------------------------------------------
+# Admission
+# ---------------------------------------------------------------------------
+
+class AdmissionPolicy:
+    """Queue ordering: which arrived request is offered the next free lane.
+
+    Stateful — owns the waiting requests.  ``peek``/``pop`` must agree (pop
+    returns exactly the request peek last showed for the same ``now``), and
+    only *arrived* requests (``req.arrival <= now``) may surface.
+    ``default_eviction`` names the EvictionPolicy paired with this ordering
+    when ``preempt=True`` and no explicit eviction policy is given.
+    """
+
+    name = "?"
+    default_eviction = "none"
+
+    def __init__(self, slo: SloClasses):
+        self.slo = slo
+
+    def push(self, req) -> None:
+        raise NotImplementedError
+
+    def peek(self, now: int):
+        raise NotImplementedError
+
+    def pop(self, now: int):
+        raise NotImplementedError
+
+    def waiting(self) -> int:
+        raise NotImplementedError
+
+    def next_arrival(self, now: int) -> Optional[int]:
+        """Earliest step at which ``peek`` could return a request, or None
+        when the queue is empty (lets the scheduler skip idle gaps)."""
+        raise NotImplementedError
+
+
+@register_admission("fifo")
+class FifoAdmission(AdmissionPolicy):
+    """Strict head-of-line order: the oldest submitted request blocks every
+    later one, even when a later one would fit — the PR 2 default,
+    bit-for-bit."""
+
+    def __init__(self, slo: SloClasses):
+        super().__init__(slo)
+        self.queue: collections.deque = collections.deque()
+
+    def push(self, req) -> None:
+        self.queue.append(req)
+
+    def peek(self, now: int):
+        if self.queue and self.queue[0].arrival <= now:
+            return self.queue[0]
+        return None
+
+    def pop(self, now: int):
+        return self.queue.popleft()
+
+    def waiting(self) -> int:
+        return len(self.queue)
+
+    def next_arrival(self, now: int) -> Optional[int]:
+        return self.queue[0].arrival if self.queue else None
+
+
+class _HeapAdmission(AdmissionPolicy):
+    """Arrival-ordered queue + ready heap: arrived requests are pulled into
+    the heap and served best-key first.  Subclasses define the key."""
+
+    def __init__(self, slo: SloClasses):
+        super().__init__(slo)
+        self.queue: collections.deque = collections.deque()
+        self._ready: list[tuple] = []
+
+    def _key(self, req) -> tuple:
+        raise NotImplementedError
+
+    def push(self, req) -> None:
+        self.queue.append(req)
+
+    def _pull_arrived(self, now: int) -> None:
+        while self.queue and self.queue[0].arrival <= now:
+            req = self.queue.popleft()
+            heapq.heappush(self._ready, self._key(req) + (req.rid, req))
+
+    def peek(self, now: int):
+        self._pull_arrived(now)
+        return self._ready[0][-1] if self._ready else None
+
+    def pop(self, now: int):
+        self._pull_arrived(now)
+        return heapq.heappop(self._ready)[-1]
+
+    def waiting(self) -> int:
+        return len(self.queue) + len(self._ready)
+
+    def next_arrival(self, now: int) -> Optional[int]:
+        if self._ready:
+            return now
+        return self.queue[0].arrival if self.queue else None
+
+
+@register_admission("priority")
+class PriorityAdmission(_HeapAdmission):
+    """Highest ``Request.priority`` first among arrived requests, FIFO
+    within a priority level (the PR 3 heap, bit-for-bit)."""
+
+    default_eviction = "priority"
+
+    def _key(self, req) -> tuple:
+        return (-req.priority, req.arrival)
+
+
+@register_admission("slo")
+class SloAdmission(_HeapAdmission):
+    """Earliest-deadline-first over SLO classes: key is the absolute TTFT
+    deadline (``arrival + class deadline``), class rank breaking ties — a
+    latency-class request with a tight deadline overtakes batch work that
+    arrived first, without starving batch forever (its deadline ages)."""
+
+    default_eviction = "slo"
+
+    def _key(self, req) -> tuple:
+        return (req.arrival + self.slo.deadline(req.slo),
+                self.slo.rank(req.slo), req.arrival)
+
+
+# ---------------------------------------------------------------------------
+# Eviction
+# ---------------------------------------------------------------------------
+
+class EvictionPolicy:
+    """Victim selection for preempt-and-swap.
+
+    ``_rank(req)`` orders requests (smaller = more important).  A slot is
+    evictable for an incoming request only if the request strictly outranks
+    *every* live lane in it — peers never evict peers, so admission cannot
+    thrash two equal-class requests through the same slot.  Among evictable
+    slots the policy parks the one whose best lane matters least, breaking
+    ties toward the youngest group (least progress lost on the swap).
+    Stateless — one instance may serve many schedulers.
+    """
+
+    name = "?"
+
+    def __init__(self, slo: SloClasses):
+        self.slo = slo
+
+    def _rank(self, req) -> float:
+        raise NotImplementedError
+
+    def outranks(self, req, others: Sequence) -> bool:
+        """True iff ``req`` is strictly more important than all ``others``."""
+        return bool(others) and all(
+            self._rank(req) < self._rank(o) for o in others)
+
+    def select_victim(self, req, candidates) -> Optional[int]:
+        """``candidates``: (slot, live requests) pairs eligible for parking.
+        Returns the victim slot, or None to leave the queue waiting."""
+        best = None
+        for slot, reqs in candidates:
+            if not self.outranks(req, reqs):
+                continue
+            key = (min(self._rank(r) for r in reqs),
+                   max(r.admitted_step for r in reqs), -slot)
+            if best is None or key > best[0]:
+                best = (key, slot)
+        return best[1] if best else None
+
+
+@register_eviction("none")
+class NoEviction(EvictionPolicy):
+    """Never preempt (the fifo pairing): outranks nothing."""
+
+    def outranks(self, req, others) -> bool:
+        return False
+
+    def select_victim(self, req, candidates) -> Optional[int]:
+        return None
+
+
+@register_eviction("priority")
+class PriorityEviction(EvictionPolicy):
+    """Rank by ``Request.priority`` (higher priority = more important)."""
+
+    def _rank(self, req) -> float:
+        return -req.priority
+
+
+@register_eviction("slo")
+class SloEviction(EvictionPolicy):
+    """Rank by SLO class: latency-class requests may park batch-class
+    slots; batch never parks anyone."""
+
+    def _rank(self, req) -> float:
+        return self.slo.rank(req.slo)
+
+
+# ---------------------------------------------------------------------------
+# Sampling
+# ---------------------------------------------------------------------------
+
+class SamplingPolicy:
+    """Per-lane next-token selection from that lane's demuxed logits."""
+
+    name = "?"
+
+    def __init__(self, slo: SloClasses):
+        self.slo = slo
+
+    def select(self, req, logits: np.ndarray) -> int:
+        raise NotImplementedError
+
+
+@register_sampling("lane")
+class LaneSampling(SamplingPolicy):
+    """PR 3 lane-aware sampling, bit-for-bit: zero temperature is the exact
+    argmax the greedy path always took; otherwise Gumbel-max from the
+    request's own seeded generator, so each lane of the mixed stream
+    samples independently."""
+
+    def select(self, req, logits: np.ndarray) -> int:
+        if req.temperature > 0.0:
+            if req.rng is None:
+                seed = req.seed if req.seed is not None else req.rid
+                req.rng = np.random.default_rng(seed)
+            z = np.asarray(logits, np.float64) / req.temperature
+            return int(np.argmax(z + req.rng.gumbel(size=z.shape)))
+        return int(np.argmax(logits))
+
+
+def resolve(kind: str, spec, slo: SloClasses):
+    """Resolve a policy ``spec`` (registered name or instance) for ``kind``
+    in {"admission", "eviction", "sampling"}."""
+    table = {"admission": _ADMISSION, "eviction": _EVICTION,
+             "sampling": _SAMPLING}[kind]
+    base = {"admission": AdmissionPolicy, "eviction": EvictionPolicy,
+            "sampling": SamplingPolicy}[kind]
+    if isinstance(spec, base):
+        return spec
+    if isinstance(spec, str):
+        return _get(table, kind, spec)(slo)
+    raise TypeError(f"{kind} policy must be a registered name or a "
+                    f"{base.__name__} instance, got {type(spec).__name__}")

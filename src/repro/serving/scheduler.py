@@ -3,43 +3,47 @@
 The lock-step ``Engine.generate`` grid serves a fixed (B, N) wave: every
 request must arrive together, run the same number of steps, and finish
 together — one long generation holds B·N−1 streams hostage.  This module
-adds stream-level granularity on top of the same jitted decode step:
+adds stream-level granularity on top of the same jitted decode step;
+*policy* decisions (queue ordering, victim selection, token sampling) are
+delegated to ``serving/policies.py`` so the scheduler itself only
+orchestrates step execution:
 
   * requests queue up with their own arrival time, prompt, length budget,
-    and sampling parameters (``Request``; ``poisson_trace`` replays a
-    Poisson arrival process);
+    sampling parameters, and SLO class (``Request``; ``poisson_trace``
+    replays a Poisson arrival process);
   * a ``SlotTable`` maps B backbone slots × N mux lanes to live request ids;
-  * admission fills free lanes — FIFO by default, or highest
-    ``Request.priority`` first under ``policy="priority"``; a freshly
-    admitted request's prompt *ramps* through the decode path one token per
-    step, muxed alongside the slot's other lanes which keep decoding
-    undisturbed — a slot is re-muxed with fresh prompts without
-    re-prefilling its live lanes;
-  * retirement (EOS or length budget) frees a lane immediately: the lane is
-    masked out of the mixed stream and its logits zeroed (``lane_mask``)
-    while the slot's remaining lanes continue;
-  * when a slot's lanes have all retired, the allocator rewinds just that
-    slot to the prefix-primed cache and its position rewinds to
-    ``prefix_len``.
+  * admission fills free lanes in the order the ``AdmissionPolicy`` dictates
+    (``fifo`` | ``priority`` | ``slo``); a freshly admitted request's prompt
+    *ramps* through the decode path muxed alongside the slot's other lanes,
+    which keep decoding undisturbed;
+  * retirement (EOS or length budget) frees a lane immediately; when a
+    slot's lanes have all retired, the allocator rewinds just that slot to
+    the prefix-primed cache;
+  * preempt-and-swap (``preempt=True``): when the grid is full (or every
+    free lane refuses the head request) and the head request outranks a
+    live slot under the ``EvictionPolicy``, that slot's lanes park together
+    in the ``SwapLedger`` — under paging the block-table row detaches with
+    its pages resident (a host-side row swap); contiguous mode snapshots
+    the slot region — and the freed slot admits the head request at
+    ``prefix_len``.  Parked groups resume into the next empty slot with
+    cache and positions restored exactly, so a victim's continuation
+    tokens are bitwise-identical to an un-preempted run and no prompt is
+    ever re-prefilled.
 
-Cache layout is pluggable (``cfg.serving.paged``):
+Admission horizons are *exact*: instead of the PR 4 conservative
+``Lp − ceil(Lp/C)`` co-lane bump, ``_slot_horizons`` simulates the slot's
+remaining chunked ramp schedule (per-lane prompt remainders and generation
+budgets, the same arithmetic the step loop executes), so a prompt that
+rides entirely inside an in-flight ramp costs its co-lanes nothing and
+tight pools admit as early as the cache truly allows.  With
+``prefill_chunk == 1`` the simulation collapses to the closed form
+``pos + Lp + gen`` — the original admission math, bit-for-bit.
 
-  * contiguous (default): ``KVSlotAllocator`` — each slot owns a private
-    ``max_len`` region; admission refuses a request that would overflow a
-    deep slot (the lane is retried later), and recycling is one jitted
-    masked ``where``;
-  * paged: ``PagedKVSlotAllocator`` — slots hold block tables over a shared
-    page pool, position space allocates on demand, and admission checks
-    *free pages* instead of slot depth: the scheduler keeps a per-lane end
-    horizon and admits whenever every slot's worst-case footprint still
-    fits the pool, so a long-running slot never blocks admission.  Drained
-    slots are recycled eagerly (free-on-retire) to return pages as soon as
-    possible.
-
-Per-slot positions (the ``(B,)`` ``pos`` vector threaded through
-``Backbone.decode_step``) are what make the slots independent: slot 0 can be
-at position 97 of a long generation while slot 1 re-admits at position
-``prefix_len``.
+Cache layout is pluggable (``cfg.serving.paged``): contiguous
+(``KVSlotAllocator``, per-slot ``max_len`` regions) or paged
+(``PagedKVSlotAllocator``, block tables over a shared pool; admission
+checks free pages, with parked groups' worst-case footprints reserved so
+resumption never deadlocks on the pool).
 
 Prefix protocol note: for causal backbones the demux-prefix hidden states
 (``index_embeds``) and prefix K/V depend only on the prefix itself, so the
@@ -50,17 +54,17 @@ path already makes.
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
-import heapq
 from typing import Any, Optional
 
 import numpy as np
 
+from repro.serving import policies as serving_policies
 from repro.serving.engine import Engine, ServeState
 from repro.serving.kvcache import KVSlotAllocator
 from repro.serving.paging import PagedKVSlotAllocator, pages_for
-from repro.serving.slots import SlotTable
+from repro.serving.policies import SloClasses
+from repro.serving.slots import ParkedGroup, SlotTable, SwapLedger
 
 
 @dataclasses.dataclass
@@ -73,10 +77,13 @@ class Request:
     temperature: float = 0.0      # 0 = greedy (bit-for-bit default path)
     seed: Optional[int] = None    # per-request sampling seed (default: rid)
     priority: int = 0             # higher admits first under policy="priority"
+    slo: str = ""                 # SLO class name (policy="slo"); unknown or
+                                  # empty resolves to the lowest class
     # runtime state (owned by the scheduler)
     admitted_step: int = -1
     finished_step: int = -1
     first_token_step: int = -1    # step the first output token appeared
+    preempted: int = 0            # times this request's slot was parked
     output: list = dataclasses.field(default_factory=list)
     fed: int = 0                  # prompt tokens consumed so far (ramp cursor)
     rng: Any = None               # lazily built per-request sampler
@@ -95,6 +102,16 @@ class Request:
         return self.first_token_step - self.admitted_step + 1
 
     @property
+    def ttft(self) -> int:
+        """Time to first token: decode steps between arrival and the first
+        generated token (0 = first token the step it arrived); -1 before
+        the first token lands.  Queueing delay included — the latency an
+        SLO deadline is written against."""
+        if self.first_token_step < 0:
+            return -1
+        return self.first_token_step - self.arrival
+
+    @property
     def done(self) -> bool:
         return self.finished_step >= 0
 
@@ -103,19 +120,24 @@ class Request:
         several engines/schedulers."""
         return dataclasses.replace(self, output=[], fed=0, admitted_step=-1,
                                    finished_step=-1, first_token_step=-1,
-                                   rng=None)
+                                   preempted=0, rng=None)
 
 
 def poisson_trace(n_requests: int, *, rate: float, prompt_len: int,
                   gen_len: int, vocab: int, max_total: int = 0,
-                  eos_id: Optional[int] = None, seed: int = 0
-                  ) -> list[Request]:
+                  eos_id: Optional[int] = None, seed: int = 0,
+                  slo_mix: float = 0.0,
+                  slo_names: tuple = ("latency", "batch")) -> list[Request]:
     """Poisson arrival process with mixed prompt/generation lengths.
 
     ``rate``: mean arrivals per decode step.  Prompt lengths are uniform in
     [1, 2·prompt_len]; generation budgets are geometric with mean
     ``gen_len`` (the long tail is what static batching chokes on).
     ``max_total`` clips prompt+gen so every request fits the cache.
+    ``slo_mix`` > 0 tags that fraction of requests with the first SLO class
+    in ``slo_names`` (interactive latency traffic) and the rest with the
+    second (throughput batch) — the two-class workload preempt-and-swap
+    exists for.
     """
     rng = np.random.default_rng(seed)
     arrivals = np.floor(np.cumsum(rng.exponential(1.0 / rate, n_requests)))
@@ -126,9 +148,13 @@ def poisson_trace(n_requests: int, *, rate: float, prompt_len: int,
         if max_total:
             lp = min(lp, max_total - 1)
             gen = max(1, min(gen, max_total - lp))
+        slo = ""
+        if slo_mix > 0.0:
+            slo = slo_names[0] if rng.random() < slo_mix else slo_names[1]
         reqs.append(Request(
             rid=i, prompt=rng.integers(0, vocab, lp).astype(np.int32),
-            max_new_tokens=gen, eos_id=eos_id, arrival=int(arrivals[i])))
+            max_new_tokens=gen, eos_id=eos_id, arrival=int(arrivals[i]),
+            slo=slo))
     return reqs
 
 
@@ -159,22 +185,71 @@ class SchedulerStats:
     occupancy_sum: float = 0.0          # Σ per-step lane occupancy
     slot_active_steps: Optional[np.ndarray] = None  # (B,) useful-work steps
     peak_pages: int = 0                 # paged mode: pool high-water mark
+    preemptions: int = 0                # slots parked into the swap ledger
+    resumes: int = 0                    # parked groups restored
+    ttft_p50: float = -1.0              # time-to-first-token percentiles
+    ttft_p99: float = -1.0              #   (filled by ``run``)
+    per_class: dict = dataclasses.field(default_factory=dict)
 
     @property
     def mean_occupancy(self) -> float:
         return self.occupancy_sum / max(1, self.decode_steps)
 
+    def finalize(self, finished: list[Request], slo: SloClasses) -> None:
+        """Fill TTFT percentiles and per-SLO-class completion stats from
+        the finished requests (idempotent; called at the end of ``run``)."""
+        ttfts = [r.ttft for r in finished if r.ttft >= 0]
+        if ttfts:
+            self.ttft_p50 = float(np.percentile(ttfts, 50))
+            self.ttft_p99 = float(np.percentile(ttfts, 99))
+        self.per_class = {}
+        for name in slo.names:
+            rs = [r for r in finished if slo.resolve(r.slo) == name]
+            if not rs:
+                continue
+            tt = [r.ttft for r in rs if r.ttft >= 0]
+            deadline = slo.deadline(name)
+            self.per_class[name] = {
+                "finished": len(rs),
+                "ttft_p50": float(np.percentile(tt, 50)) if tt else -1.0,
+                "ttft_p99": float(np.percentile(tt, 99)) if tt else -1.0,
+                "ttft_deadline": deadline,
+                "deadline_hit_rate": (sum(t <= deadline for t in tt)
+                                      / len(tt)) if tt else 0.0,
+                "preempted": sum(r.preempted for r in rs),
+            }
+
 
 class ContinuousScheduler:
-    """Continuous batching over an ``Engine``: stream-level admission and
-    retirement on a B-slot × N-lane grid sharing one jitted decode step."""
+    """Continuous batching over an ``Engine``: stream-level admission,
+    retirement, and preempt-and-swap on a B-slot × N-lane grid sharing one
+    jitted decode step.  Queue ordering, victim selection, and sampling are
+    pluggable (``serving/policies.py``); defaults come from
+    ``cfg.serving`` so a config fully describes the serving behaviour."""
 
-    def __init__(self, engine: Engine, *, policy: str = "fifo"):
-        if policy not in ("fifo", "priority"):
-            raise ValueError(f"unknown admission policy {policy!r}")
+    def __init__(self, engine: Engine, *, policy=None, preempt=None,
+                 eviction=None, sampling=None):
         self.engine = engine
-        self.policy = policy
         cfg = engine.cfg
+        self.slo = SloClasses(cfg.serving.slo_classes)
+        self.admission = serving_policies.resolve(
+            "admission", cfg.serving.policy if policy is None else policy,
+            self.slo)
+        self.policy = self.admission.name
+        self.preempt = cfg.serving.preempt if preempt is None else preempt
+        self.eviction = serving_policies.resolve(
+            "eviction",
+            self.admission.default_eviction if eviction is None else eviction,
+            self.slo)
+        if self.preempt and isinstance(self.eviction,
+                                       serving_policies.NoEviction):
+            raise ValueError(
+                f"preempt=True needs a ranked eviction policy, but "
+                f"admission policy {self.policy!r} pairs with 'none'; use "
+                f"policy='slo'/'priority' or pass eviction= explicitly")
+        self.sampling = serving_policies.resolve(
+            "sampling", "lane" if sampling is None else sampling, self.slo)
+
         self.n_slots = engine.batch
         self.n_lanes = cfg.mux.n if cfg.mux.active else 1
         self.prefix_len = cfg.mux.prefix_len
@@ -199,20 +274,20 @@ class ContinuousScheduler:
         self.cross_kv = primed.cross_kv
 
         self.table = SlotTable(self.n_slots, self.n_lanes)
+        self.ledger = SwapLedger()
         self.pos = np.full(self.n_slots, self.prefix_len, np.int32)
-        # Per-lane end-position horizon (exclusive; -1 = free lane): the
-        # paged admission check sizes every slot's worst-case footprint in
-        # pages against the pool.
+        # Per-lane end-position horizon (exclusive; -1 = free lane),
+        # refreshed from the exact ramp simulation each admission round:
+        # the paged admission check sizes every slot's worst-case footprint
+        # in pages against the pool.
         self.lane_end = np.full((self.n_slots, self.n_lanes), -1, np.int64)
-        self.queue: collections.deque[Request] = collections.deque()
-        self._ready: list[tuple] = []    # priority heap of arrived requests
         self.requests: dict[int, Request] = {}
         self.finished: list[Request] = []
         self.t = 0                       # scheduler clock (steps)
         self.stats = SchedulerStats(
             slot_active_steps=np.zeros(self.n_slots, np.int64))
 
-    # -- queue (fifo deque / priority heap over arrived requests) ---------------
+    # -- queue (delegated to the admission policy) -----------------------------
 
     def submit(self, req: Request) -> None:
         need = self.prefix_len + len(req.prompt) + req.max_new_tokens
@@ -238,151 +313,298 @@ class ContinuousScheduler:
                     f"{alloc.table.usable_pages - (self.n_slots - 1) * alloc.n_prefix_pages}"
                     f"; raise serving.pool_pages")
         self.requests[req.rid] = req
-        self.queue.append(req)
-
-    def _pull_arrived(self) -> None:
-        """Priority mode: move arrived requests from the arrival-ordered
-        queue into the ready heap (highest priority, then FIFO)."""
-        while self.queue and self.queue[0].arrival <= self.t:
-            req = self.queue.popleft()
-            heapq.heappush(self._ready,
-                           (-req.priority, req.arrival, req.rid, req))
+        self.admission.push(req)
 
     def _peek(self) -> Optional[Request]:
-        """Next admittable request, or None.  FIFO preserves strict
-        head-of-line order; priority picks the best *arrived* request."""
-        if self.policy == "priority":
-            self._pull_arrived()
-            return self._ready[0][3] if self._ready else None
-        if self.queue and self.queue[0].arrival <= self.t:
-            return self.queue[0]
-        return None
+        return self.admission.peek(self.t)
 
     def _pop(self) -> Request:
-        if self.policy == "priority":
-            return heapq.heappop(self._ready)[3]
-        return self.queue.popleft()
+        return self.admission.pop(self.t)
 
     def _waiting(self) -> int:
-        return len(self.queue) + len(self._ready)
+        return self.admission.waiting()
 
     def _next_arrival(self) -> Optional[int]:
-        if self._ready:
-            return self.t
-        return self.queue[0].arrival if self.queue else None
+        return self.admission.next_arrival(self.t)
 
-    # -- admission ------------------------------------------------------------
+    # -- exact horizon accounting ----------------------------------------------
 
-    def _live_ramp(self, slot: int) -> int:
-        """Max remaining prompt tokens among the slot's live ramping lanes —
-        the positions the slot will consume before its ramps drain."""
-        m = 0
+    def _lane_state(self, req: Request) -> tuple[int, int]:
+        """(prompt tokens left to feed, output feeds left) — the output
+        count includes one virtual position for the final sampled token
+        that is never fed back, matching the classic ``pos + Lp + gen``
+        reservation."""
+        rp = len(req.prompt) - req.fed
+        k = len(req.output)
+        rf = req.max_new_tokens - k + (1 if k else 0)
+        return rp, rf
+
+    def _sim_ends(self, pos: int, states: list[list]) -> list[int]:
+        """Exact per-lane end horizons (exclusive): replay the slot's
+        remaining chunked schedule — each ramping lane feeds up to
+        ``chunk`` prompt tokens per step, decoding lanes feed one, and the
+        slot advances by the largest take — with no further admissions.
+        EOS may retire lanes earlier, so these are tight upper bounds.
+        ``chunk == 1`` short-circuits to the closed form the original
+        scheduler used (every lane advances one position per step)."""
+        if self.chunk == 1:
+            return [pos + rp + rf for rp, rf in states]
+        C = self.chunk
+        st = [list(s) for s in states]
+        ends = [pos] * len(st)
+        p = pos
+        while True:
+            if all(rp <= 0 for rp, _ in st):
+                # No ramps left: every live lane advances one position per
+                # step, so the closed form finishes the simulation — the
+                # steady-state decode path never loops over its remaining
+                # generation budget.
+                for i, (_, rf) in enumerate(st):
+                    if rf > 0:
+                        ends[i] = p + rf
+                return ends
+            takes = [min(C, rp) if rp > 0 else (1 if rf > 0 else 0)
+                     for rp, rf in st]
+            valid = max(takes, default=0)
+            if valid == 0:
+                return ends
+            for i, take in enumerate(takes):
+                if take == 0:
+                    continue
+                if st[i][0] > 0:
+                    st[i][0] -= take
+                else:
+                    st[i][1] -= 1
+                ends[i] = p + take
+            p += valid
+
+    def _slot_horizons(self, s: int, pos: int,
+                       extra: Optional[tuple[int, int]] = None
+                       ) -> tuple[list[int], list[int], list[int]]:
+        """Exact end horizons for slot ``s`` decoding from ``pos``, with an
+        optional candidate lane (``extra`` = its (rp, rf) state) appended.
+        Returns (lane indices, their ends, candidate-included ends)."""
+        states, idx = [], []
         for l in range(self.n_lanes):
-            rid = int(self.table.grid[slot, l])
+            rid = int(self.table.grid[s, l])
             if rid < 0:
                 continue
-            r = self.requests[rid]
-            if r.ramping:
-                m = max(m, len(r.prompt) - r.fed)
-        return m
+            states.append(list(self._lane_state(self.requests[rid])))
+            idx.append(l)
+        if extra is not None:
+            states.append(list(extra))
+        ends = self._sim_ends(pos, states)
+        return idx, ends[:len(idx)], ends
 
-    def _ramp_cost(self, lp: int) -> int:
-        """Extra positions a co-lane rides through while a length-``lp``
-        prompt ramps chunked: the slot consumes ``lp`` positions in
-        ``ceil(lp / chunk)`` steps, so a decoding lane earns only
-        ``ceil(lp / chunk)`` tokens over that window — its end horizon
-        drifts out by the difference.  Zero when chunk == 1."""
-        return lp - -(-lp // self.chunk)
+    def _refresh_horizons(self) -> None:
+        """Re-derive every live lane's exact end horizon from its current
+        ramp/decode state — tightens after EOS retirements and keeps the
+        paged pool accounting honest between admission rounds."""
+        for s in range(self.n_slots):
+            if self.table.slot_empty(s):
+                continue
+            idx, ends, _ = self._slot_horizons(s, int(self.pos[s]))
+            for l, e in zip(idx, ends):
+                self.lane_end[s, l] = e
 
-    def _fits_pages(self, slot: int, end: int, fresh: set) -> bool:
-        """Paged admission: would every slot's worst-case footprint still
-        fit the pool if this request (ending at ``end``) joined ``slot``?
-        Slots recycled this round (``fresh``) count their prefix pages only.
-        Conservative — no preemption needed mid-decode."""
+    def _fits_pages(self, fresh: set, overrides: dict,
+                    extra_reserved: int = 0) -> bool:
+        """Paged admission: would every slot's worst-case footprint — plus
+        the swap ledger's parked reservations — still fit the pool?
+        ``overrides`` maps slot -> hypothetical end horizon (a candidate
+        admission or a preemption's fresh occupant); slots recycled this
+        round (``fresh``) count their prefix pages only.  Parked groups
+        reserve their full horizon, so resumption never waits on pages."""
         alloc = self.allocator
-        total = 0
+        total = self.ledger.reserved_pages() + extra_reserved
         for s in range(self.n_slots):
             allocated = alloc.n_prefix_pages if s in fresh \
                 else int(alloc.table.n_allocated[s])
-            horizon = int(self.lane_end[s].max())
-            if s == slot:
-                horizon = max(horizon, end)
+            horizon = overrides.get(s, int(self.lane_end[s].max()))
             need = allocated
             if horizon > 0:
                 need = max(need, pages_for(horizon, alloc.page_size))
             total += need
         return total <= alloc.table.usable_pages
 
+    # -- admission -------------------------------------------------------------
+
     def _admit(self) -> None:
-        """Fill free lanes from the queue (arrived requests only).  Empty
-        slots whose position has drifted past ``prefix_len`` are rewound via
-        one batched cache reset before re-occupying."""
+        """Resume parked groups, fill free lanes from the queue, and — when
+        the head request outranks a live slot — preempt.  Empty slots whose
+        position has drifted past ``prefix_len`` are rewound via one
+        batched cache reset before re-occupying."""
         to_reset = np.zeros(self.n_slots, bool)
         target: dict[int, int] = {}      # slot -> admission position
         fresh: set[int] = set()          # slots recycled this round
-        n_planned = 0
+        self._refresh_horizons()
+        self._resume_parked(target)
+        n_admitted = 0
+        while True:
+            n_admitted += self._fill_free_lanes(target, fresh, to_reset)
+            if not (self.preempt and self._preempt_one(target, fresh,
+                                                       to_reset)):
+                break
+        if to_reset.any():
+            self.allocator.reset_slots(to_reset)
+            self.pos[to_reset] = self.prefix_len
+            self.stats.slot_resets += int(to_reset.sum())
+        self.stats.admitted += n_admitted
+
+    def _fill_free_lanes(self, target: dict, fresh: set,
+                         to_reset: np.ndarray) -> int:
+        """Offer free lanes to the admission policy's head request: an
+        empty slot rewinds to the primed prefix; a live slot admits
+        in-stream at its current position (the prompt ramps during
+        decode).  A lane is granted only if the exact horizons of every
+        lane it would share the slot with stay inside the cache (and, when
+        paged, the pool)."""
+        n = 0
         for (s, l) in self.table.free_lanes():
             req = self._peek()
             if req is None:
                 break
             if s not in target:
-                # First admission into this slot this round: an empty slot
-                # rewinds to the primed prefix; a live slot admits in-stream
-                # at its current position (the prompt ramps during decode).
                 if self.table.slot_empty(s):
                     target[s] = self.prefix_len
                     fresh.add(s)
                 else:
                     target[s] = int(self.pos[s])
             pos = target[s]
-            lp, gen = len(req.prompt), req.max_new_tokens
-            live = self.lane_end[s] >= 0
-            cost = self._ramp_cost(lp)
-            if self.chunk > 1:
-                # Conservative chunked horizons: the new lane rides through
-                # any ramp already in flight (max(lp, live_ramp) positions
-                # before its own decode), and every co-lane's end drifts out
-                # by ``cost`` while this prompt ramps.
-                end = pos + max(lp, self._live_ramp(s)) + gen
-                bump_max = int((self.lane_end[s][live] + cost).max()) \
-                    if cost and live.any() else 0
-            else:
-                end = pos + lp + gen
-                bump_max = 0
-            if max(end, bump_max) > self.engine.max_len:
+            idx, ends, all_ends = self._slot_horizons(
+                s, pos, extra=(len(req.prompt), req.max_new_tokens))
+            horizon = max(all_ends)
+            if horizon > self.engine.max_len:
                 continue  # slot too deep for this request; try another lane
-            horizon = max(end, bump_max)
-            if self.paged and not self._fits_pages(s, horizon, fresh):
+            if self.paged and not self._fits_pages(fresh, {s: horizon}):
                 continue  # pool too full for this slot; try another lane
             self._pop()
             if pos != int(self.pos[s]):
                 to_reset[s] = True
             self.table.occupy(s, l, req.rid)
-            if cost:
-                self.lane_end[s, live] += cost
-            self.lane_end[s, l] = end
+            # Exact bookkeeping for every lane the admission touches: the
+            # co-lanes' ends move only as far as the simulation says (zero
+            # when an in-flight ramp already covers the new prompt).
+            for li, e in zip(idx, ends):
+                self.lane_end[s, li] = e
+            self.lane_end[s, l] = all_ends[-1]
             req.admitted_step = self.t
-            n_planned += 1
-        if to_reset.any():
-            self.allocator.reset_slots(to_reset)
-            self.pos[to_reset] = self.prefix_len
-            self.stats.slot_resets += int(to_reset.sum())
-        self.stats.admitted += n_planned
+            n += 1
+        return n
 
-    # -- sampling ---------------------------------------------------------------
+    # -- preempt-and-swap ------------------------------------------------------
 
-    def _sample(self, req: Request, logits: np.ndarray) -> int:
-        """Per-lane next token.  Zero temperature is the exact argmax the
-        greedy path always took (bit-for-bit identical); otherwise
-        Gumbel-max sampling from the request's own seeded generator, so
-        each lane of the mixed stream samples independently."""
-        if req.temperature > 0.0:
-            if req.rng is None:
-                seed = req.seed if req.seed is not None else req.rid
-                req.rng = np.random.default_rng(seed)
-            z = np.asarray(logits, np.float64) / req.temperature
-            return int(np.argmax(z + req.rng.gumbel(size=z.shape)))
-        return int(np.argmax(logits))
+    def _park_candidates(self, target: dict) -> list:
+        """Slots eligible to park: live lanes, untouched this admission
+        round (no planned admissions or resumes to unwind)."""
+        out = []
+        for s in range(self.n_slots):
+            if s in target or self.table.slot_empty(s):
+                continue
+            reqs = [self.requests[int(r)] for r in self.table.grid[s]
+                    if r >= 0]
+            out.append((s, reqs))
+        return out
+
+    def _preempt_one(self, target: dict, fresh: set,
+                     to_reset: np.ndarray) -> bool:
+        """Park one victim slot for the head request, if the eviction
+        policy names one and the freed slot verifiably fits the request —
+        the subsequent fill round then admits it there.  Returns whether a
+        preemption happened."""
+        req = self._peek()
+        if req is None:
+            return False
+        victim = self.eviction.select_victim(req,
+                                             self._park_candidates(target))
+        if victim is None:
+            return False
+        end = self.prefix_len + len(req.prompt) + req.max_new_tokens
+        if end > self.engine.max_len:
+            return False
+        group_reserve = 0
+        if self.paged:
+            alloc = self.allocator
+            # The park itself reprovisions fresh prefix pages for the freed
+            # slot; pages freed by this round's recycles return to the free
+            # list only at the batched reset, so check the list directly.
+            if alloc.table.free_pages < alloc.n_prefix_pages:
+                return False
+            group_reserve = pages_for(int(self.lane_end[victim].max()),
+                                      alloc.page_size)
+            if not self._fits_pages(fresh | {victim}, {victim: end},
+                                    extra_reserved=group_reserve):
+                return False
+        self._park(victim, group_reserve, target, fresh, to_reset)
+        return True
+
+    def _park(self, victim: int, group_reserve: int, target: dict,
+              fresh: set, to_reset: np.ndarray) -> None:
+        """Move the victim slot's live lanes into the swap ledger and hand
+        the slot, rewound to the primed prefix, to the next admission."""
+        lanes: dict[int, Request] = {}
+        for l in range(self.n_lanes):
+            rid = int(self.table.grid[victim, l])
+            if rid < 0:
+                continue
+            req = self.requests[rid]
+            req.preempted += 1
+            self.table.release(victim, l)
+            lanes[l] = req
+        self.ledger.append(ParkedGroup(
+            lanes=lanes, pos=int(self.pos[victim]),
+            horizon=int(self.lane_end[victim].max()), parked_step=self.t,
+            payload=self.allocator.park_slot(victim),
+            reserved_pages=group_reserve))
+        self.lane_end[victim] = -1
+        target[victim] = self.prefix_len
+        fresh.add(victim)
+        to_reset[victim] = True
+        self.stats.preemptions += 1
+
+    def _fits_fresh(self, req: Request, slot: int) -> bool:
+        """Would ``req`` be admitted into ``slot`` rewound to the primed
+        prefix — the same horizon/pool arithmetic the fill loop applies to
+        a fresh slot."""
+        end = self.prefix_len + len(req.prompt) + req.max_new_tokens
+        if end > self.engine.max_len:
+            return False
+        return not self.paged or self._fits_pages({slot}, {slot: end})
+
+    def _resume_parked(self, target: dict) -> None:
+        """Restore parked groups (oldest first) into empty slots.  At most
+        one empty slot is left to the fill loop, and only when the queue's
+        head request outranks the oldest group *and* verifiably fits a
+        fresh slot — resuming there would just re-park the group.  A head
+        that cannot fit never blocks resumption: otherwise a parked
+        group's page reservation could livelock the pool (head
+        unadmittable, group never resumed, nothing ever progresses).  Pool
+        fit of the group itself needs no re-check — parked groups keep
+        their worst-case footprint reserved in ``_fits_pages``."""
+        reserved_for_head = False
+        for slot in range(self.n_slots):
+            if not len(self.ledger):
+                break
+            if slot in target or not self.table.slot_empty(slot):
+                continue
+            group = self.ledger.head()
+            head = self._peek()
+            if (not reserved_for_head and head is not None
+                    and self.eviction.outranks(head,
+                                               list(group.lanes.values()))
+                    and self._fits_fresh(head, slot)):
+                reserved_for_head = True
+                continue
+            self.ledger.popleft()
+            self.allocator.resume_slot(slot, group.payload)
+            self.pos[slot] = group.pos
+            for l, req in group.lanes.items():
+                self.table.occupy(slot, l, req.rid)
+            idx, ends, _ = self._slot_horizons(slot, group.pos)
+            for l, e in zip(idx, ends):
+                self.lane_end[slot, l] = e
+            target[slot] = group.pos
+            self.stats.resumes += 1
 
     # -- one decode step --------------------------------------------------------
 
@@ -514,7 +736,7 @@ class ContinuousScheduler:
     def _emit(self, req: Request, lane_logits, s: int, l: int,
               released: set) -> None:
         """Sample one token for a lane; retire it on EOS / length budget."""
-        tok = self._sample(req, lane_logits)
+        tok = self.sampling.select(req, lane_logits)
         if not req.output:
             req.first_token_step = self.t
         req.output.append(tok)
@@ -551,16 +773,18 @@ class ContinuousScheduler:
     def run(self, requests: Optional[list[Request]] = None, *,
             max_steps: int = 100_000) -> SchedulerStats:
         """Replay a trace to completion.  The clock jumps over fully idle
-        gaps (no live lanes, next arrival in the future) without burning
-        decode steps."""
+        gaps (no live or parked lanes, next arrival in the future) without
+        burning decode steps."""
         for r in (requests or []):
             self.submit(r)
-        while (self._waiting() or self.table.live_requests()) and \
+        while (self._waiting() or self.table.live_requests()
+               or len(self.ledger)) and \
                 self.stats.decode_steps < max_steps:
             nxt = self._next_arrival()
-            if not self.table.live_requests() and nxt is not None and \
-                    nxt > self.t:
+            if not self.table.live_requests() and not len(self.ledger) and \
+                    nxt is not None and nxt > self.t:
                 self.stats.idle_steps += nxt - self.t
                 self.t = nxt
             self.step()
+        self.stats.finalize(self.finished, self.slo)
         return self.stats

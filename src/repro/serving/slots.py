@@ -9,15 +9,73 @@ lane 2 while lanes 0/1/3 keep decoding — so the table tracks occupancy per
 Pure-Python bookkeeping (no jax): the scheduler turns ``lane_mask()`` into
 the device-side mask each step.  Positions live in the scheduler; cache
 contents live in the ``KVSlotAllocator``.
+
+Preempt-and-swap (``SwapLedger``): a slot's N lanes share one mixed-stream
+cache, so the *swap unit is the whole slot* — parking a victim parks every
+live lane of it together (a ``ParkedGroup``), and the group later resumes
+together into any empty slot, cache state and positions restored exactly.
+The ledger is FIFO over groups; the cache payload (a detached block-table
+row under paging, a full slot snapshot contiguous) is opaque to it and
+owned by the allocator that produced it.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Iterator, Optional
+from typing import Any, Iterator, Optional
 
 import numpy as np
 
 FREE = -1
+
+
+@dataclasses.dataclass
+class ParkedGroup:
+    """One preempted slot's lanes, frozen mid-decode.
+
+    ``lanes`` maps lane index -> the live ``Request`` (its runtime state —
+    ramp cursor, outputs, sampler rng — rides along, so resumption feeds
+    ``output[-1]`` and continues bitwise).  ``payload`` is the allocator's
+    parked cache state; ``reserved_pages`` keeps the group's worst-case
+    footprint counted in paged admission while it is off the table, which
+    guarantees a parked group can always resume without re-checking the
+    pool (an empty slot is the only thing it waits for)."""
+    lanes: dict[int, Any]          # lane -> Request
+    pos: int                       # slot position at park time
+    horizon: int                   # exclusive worst-case end position
+    parked_step: int               # scheduler clock at park time
+    payload: Any                   # allocator park state (opaque)
+    reserved_pages: int = 0        # paged: pages_for(horizon), else 0
+
+
+class SwapLedger:
+    """FIFO of parked groups awaiting resumption."""
+
+    def __init__(self):
+        self._groups: collections.deque[ParkedGroup] = collections.deque()
+
+    def append(self, group: ParkedGroup) -> None:
+        self._groups.append(group)
+
+    def head(self) -> ParkedGroup:
+        return self._groups[0]
+
+    def popleft(self) -> ParkedGroup:
+        return self._groups.popleft()
+
+    def __len__(self) -> int:
+        return len(self._groups)
+
+    def __iter__(self) -> Iterator[ParkedGroup]:
+        return iter(self._groups)
+
+    def reserved_pages(self) -> int:
+        """Pages held out of admission's budget by parked groups."""
+        return sum(g.reserved_pages for g in self._groups)
+
+    def live_requests(self) -> list[int]:
+        """Request ids parked in the ledger (still in flight, not lost)."""
+        return [r.rid for g in self._groups for r in g.lanes.values()]
 
 
 @dataclasses.dataclass

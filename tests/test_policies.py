@@ -1,0 +1,223 @@
+"""Serving policy protocols (ISSUE 5): the admission / eviction / sampling
+registry, the fifo | priority | slo implementations, and the authoring path
+(register a custom policy, serve with it) that mirrors the mux-strategy
+guide."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, MuxConfig, ServingConfig
+from repro.models import Backbone
+from repro.serving import policies
+from repro.serving.engine import Engine
+from repro.serving.policies import (AdmissionPolicy, FifoAdmission,
+                                    NoEviction, PriorityAdmission,
+                                    PriorityEviction, SloAdmission,
+                                    SloClasses, SloEviction, LaneSampling,
+                                    register_admission,
+                                    unregister_admission)
+from repro.serving.scheduler import ContinuousScheduler, Request
+
+SLO = SloClasses((("latency", 8), ("batch", 64)))
+
+
+def _req(rid, *, arrival=0, priority=0, slo="", lp=1, gen=2,
+         admitted_step=-1):
+    r = Request(rid=rid, prompt=np.zeros(lp, np.int32), max_new_tokens=gen,
+                arrival=arrival, priority=priority, slo=slo)
+    r.admitted_step = admitted_step
+    return r
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+def test_registry_lists_and_resolves():
+    assert {"fifo", "priority", "slo"} <= set(policies.list_admission())
+    assert {"none", "priority", "slo"} <= set(policies.list_eviction())
+    assert "lane" in policies.list_sampling()
+    adm = policies.resolve("admission", "slo", SLO)
+    assert isinstance(adm, SloAdmission) and adm.name == "slo"
+    # an instance passes straight through
+    assert policies.resolve("admission", adm, SLO) is adm
+    with pytest.raises(ValueError, match="policy"):
+        policies.resolve("admission", "lifo", SLO)
+    with pytest.raises(TypeError, match="admission"):
+        policies.resolve("admission", 42, SLO)
+
+
+def test_registry_rejects_duplicate_names():
+    with pytest.raises(ValueError, match="already registered"):
+        @register_admission("fifo")
+        class Dup(AdmissionPolicy):
+            pass
+
+
+def test_slo_classes_rank_deadline_and_fallback():
+    assert SLO.rank("latency") == 0 and SLO.rank("batch") == 1
+    assert SLO.deadline("latency") == 8
+    # unknown / empty class names resolve to the lowest class
+    assert SLO.resolve("") == "batch" and SLO.rank("nope") == 1
+    assert SLO.deadline("") == 64
+
+
+# ---------------------------------------------------------------------------
+# Admission orderings
+# ---------------------------------------------------------------------------
+
+def test_fifo_admission_strict_arrival_gate():
+    adm = FifoAdmission(SLO)
+    adm.push(_req(0, arrival=3))
+    adm.push(_req(1, arrival=5))
+    assert adm.peek(now=2) is None          # nothing has arrived yet
+    assert adm.next_arrival(now=2) == 3
+    assert adm.peek(now=4).rid == 0
+    assert adm.pop(now=4).rid == 0
+    assert adm.waiting() == 1
+
+
+def test_priority_admission_orders_arrived_by_priority():
+    adm = PriorityAdmission(SLO)
+    for r in (_req(0, priority=0), _req(1, priority=5), _req(2, priority=5)):
+        adm.push(r)
+    # highest priority first, FIFO within a level
+    assert [adm.pop(0).rid for _ in range(3)] == [1, 2, 0]
+
+
+def test_slo_admission_is_edf_without_starvation():
+    adm = SloAdmission(SLO)
+    adm.push(_req(0, arrival=0, slo="batch"))     # deadline 0 + 64 = 64
+    adm.push(_req(1, arrival=2, slo="latency"))   # deadline 2 + 8 = 10
+    adm.push(_req(2, arrival=3, slo="latency"))   # deadline 3 + 8 = 11
+    # latency overtakes the earlier batch arrival
+    assert [adm.pop(5).rid for _ in range(3)] == [1, 2, 0]
+    # ...but an aged batch request's deadline eventually wins (no starvation)
+    adm.push(_req(3, arrival=0, slo="batch"))     # deadline 64
+    adm.push(_req(4, arrival=60, slo="latency"))  # deadline 68
+    assert adm.pop(60).rid == 3
+
+
+# ---------------------------------------------------------------------------
+# Eviction
+# ---------------------------------------------------------------------------
+
+def test_eviction_outranks_is_strict():
+    ev = SloEviction(SLO)
+    lat, batch = _req(0, slo="latency"), _req(1, slo="batch")
+    assert ev.outranks(lat, [batch])
+    assert not ev.outranks(batch, [lat])
+    assert not ev.outranks(lat, [lat])            # peers never evict peers
+    assert not ev.outranks(lat, [batch, lat])     # one peer shields the slot
+    assert not ev.outranks(lat, [])               # empty slot: nothing to park
+
+
+def test_eviction_prefers_most_preemptible_then_youngest():
+    ev = SloEviction(SLO)
+    lat = _req(9, slo="latency")
+    candidates = [
+        (0, [_req(1, slo="batch", admitted_step=4)]),
+        (1, [_req(2, slo="batch", admitted_step=7)]),   # youngest batch slot
+        (2, [_req(3, slo="latency", admitted_step=1)]),  # shielded by a peer
+    ]
+    assert ev.select_victim(lat, candidates) == 1
+    assert ev.select_victim(_req(8, slo="batch"), candidates) is None
+    assert NoEviction(SLO).select_victim(lat, candidates) is None
+
+
+def test_priority_eviction_ranks_by_request_priority():
+    ev = PriorityEviction(SLO)
+    hi, lo = _req(0, priority=5), _req(1, priority=1)
+    assert ev.outranks(hi, [lo]) and not ev.outranks(lo, [hi])
+    assert ev.select_victim(hi, [(0, [lo])]) == 0
+    assert ev.select_victim(lo, [(0, [hi])]) is None
+
+
+# ---------------------------------------------------------------------------
+# Sampling
+# ---------------------------------------------------------------------------
+
+def test_lane_sampling_matches_legacy_paths():
+    samp = LaneSampling(SLO)
+    logits = np.linspace(-1.0, 1.0, 16)
+    greedy = _req(0)
+    assert samp.select(greedy, logits) == int(np.argmax(logits))
+    # seeded Gumbel-max: reproducible per seed, divergent across seeds
+    r1 = Request(rid=1, prompt=np.zeros(1, np.int32), max_new_tokens=4,
+                 temperature=0.7, seed=7)
+    r2 = Request(rid=1, prompt=np.zeros(1, np.int32), max_new_tokens=4,
+                 temperature=0.7, seed=7)
+    r3 = Request(rid=1, prompt=np.zeros(1, np.int32), max_new_tokens=4,
+                 temperature=0.7, seed=8)
+    s1 = [samp.select(r1, logits) for _ in range(6)]
+    s2 = [samp.select(r2, logits) for _ in range(6)]
+    s3 = [samp.select(r3, logits) for _ in range(6)]
+    assert s1 == s2 and s1 != s3
+
+
+# ---------------------------------------------------------------------------
+# Config / engine validation + custom-policy authoring path
+# ---------------------------------------------------------------------------
+
+CFG = ModelConfig(
+    name="policies-tiny", family="dense", n_layers=2, d_model=64, n_heads=2,
+    n_kv_heads=2, d_ff=128, vocab=128, dtype="float32",
+    param_dtype="float32", remat="none",
+    mux=MuxConfig(n=2, strategy="hadamard", demux="index_embed"))
+
+
+def test_serving_config_validates_policy_fields():
+    with pytest.raises(ValueError, match="policy"):
+        ServingConfig(policy="")
+    with pytest.raises(ValueError, match="duplicate"):
+        ServingConfig(slo_classes=(("a", 2), ("a", 3)))
+    with pytest.raises(ValueError, match="deadline"):
+        ServingConfig(slo_classes=(("a", 0),))
+
+
+def test_engine_fails_fast_on_bad_policy_config():
+    params = Backbone.init(jax.random.PRNGKey(0), CFG)
+    bad = dataclasses.replace(CFG, serving=ServingConfig(policy="lifo"))
+    with pytest.raises(ValueError, match="policy"):
+        Engine(params, bad, batch=1, max_len=16)
+    # fifo + preempt is only an error without an explicit eviction
+    # override, so the engine builds and the *scheduler* decides
+    nopair = dataclasses.replace(
+        CFG, serving=ServingConfig(policy="fifo", preempt=True))
+    eng = Engine(params, nopair, batch=1, max_len=16)
+    with pytest.raises(ValueError, match="preempt"):
+        ContinuousScheduler(eng)
+    assert ContinuousScheduler(eng, eviction="priority").preempt
+
+
+def test_custom_admission_policy_end_to_end(key):
+    """The policy-authoring path from the README guide: subclass, register,
+    serve — shortest-job-first empties the queue shortest budget first."""
+
+    @register_admission("sjf")
+    class ShortestJobFirst(policies._HeapAdmission):
+        def _key(self, req):
+            return (req.max_new_tokens, req.arrival)
+
+    try:
+        params = Backbone.init(key, CFG)
+        eng = Engine(params, CFG, batch=1, max_len=32)
+        sched = ContinuousScheduler(eng, policy="sjf")
+        rng = np.random.default_rng(0)
+        # 3 requests over a 2-lane slot: the shortest jobs (rids 1, 2) take
+        # the lanes at t=0 and rid 0 — submitted first but longest — waits,
+        # the opposite of FIFO's head-of-line order
+        reqs = [Request(rid=i,
+                        prompt=rng.integers(0, CFG.vocab, 2).astype(np.int32),
+                        max_new_tokens=gen)
+                for i, gen in enumerate([8, 6, 2])]
+        sched.run(reqs)
+        r = {q.rid: q for q in sched.finished}
+        assert len(r) == 3
+        assert r[1].admitted_step == 0 and r[2].admitted_step == 0
+        assert r[0].admitted_step > 0
+        assert sched.policy == "sjf"
+    finally:
+        unregister_admission("sjf")

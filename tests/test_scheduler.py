@@ -1,6 +1,7 @@
 """Continuous-batching scheduler: stream-level admission/retirement over the
 B-slot × N-lane grid, per-slot position vectors, and the static-baseline
-step-count comparison (ISSUE 2 acceptance criteria)."""
+step-count comparison (ISSUE 2 acceptance criteria); preempt-and-swap and
+exact horizon accounting (ISSUE 5)."""
 import dataclasses
 
 import jax
@@ -8,6 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.configs.base import ServingConfig
 from repro.configs.registry import get_smoke_config
 from repro.models import Backbone
 from repro.serving.engine import Engine, ServeState
@@ -276,3 +278,201 @@ def test_priority_late_arrival_admitted_first(key):
     with pytest.raises(ValueError, match="policy"):
         ContinuousScheduler(Engine(params, cfg, batch=2, max_len=32),
                             policy="lifo")
+
+
+# ---------------------------------------------------------------------------
+# Preempt-and-swap (ISSUE 5)
+# ---------------------------------------------------------------------------
+
+def _serving_cfg(paged, *, preempt=True, chunk=1, page_size=4):
+    return ServingConfig(paged=paged, page_size=page_size,
+                         prefill_chunk=chunk, policy="slo", preempt=preempt)
+
+
+def _slo_requests(spec, *, vocab=512, seed=0):
+    """spec: list of (lp, gen, arrival, slo)."""
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, vocab, lp).astype(np.int32),
+                    max_new_tokens=gen, arrival=arr, slo=slo)
+            for i, (lp, gen, arr, slo) in enumerate(spec)]
+
+
+@pytest.mark.parametrize("paged", [False, True])
+@pytest.mark.parametrize("chunk", [1, 3])
+def test_preempt_victim_resumes_bitwise(key, paged, chunk):
+    """A latency-class arrival on a full grid parks the batch-class slot,
+    beats the no-preempt TTFT, and the victims — resumed after the latency
+    request drains — emit tokens bitwise-identical to a run where they
+    were never preempted.  Both cache layouts, both ramp widths."""
+    cfg = dataclasses.replace(_cfg(),
+                              serving=_serving_cfg(paged, chunk=chunk))
+    params = Backbone.init(key, cfg)
+    victims = _slo_requests([(3, 18, 0, "batch"), (2, 18, 0, "batch")])
+    lat = _slo_requests([(2, 3, 4, "latency")])[0]
+    lat = dataclasses.replace(lat, rid=2)
+
+    def build(preempt):
+        c = dataclasses.replace(
+            cfg, serving=dataclasses.replace(cfg.serving, preempt=preempt))
+        return ContinuousScheduler(Engine(params, c, batch=1, max_len=64))
+
+    # un-preempted reference: the victim group running alone
+    ref = build(preempt=False)
+    ref.run([r.fresh() for r in victims])
+    ref_out = {q.rid: list(q.output) for q in ref.finished}
+
+    # no-preempt baseline with the latency arrival queued behind the grid
+    base = build(preempt=False)
+    base.run([r.fresh() for r in victims] + [lat.fresh()])
+    base_ttft = {q.rid: q.ttft for q in base.finished}[2]
+
+    pre = build(preempt=True)
+    stats = pre.run([r.fresh() for r in victims] + [lat.fresh()])
+    out = {q.rid: q for q in pre.finished}
+
+    assert stats.finished == 3
+    assert stats.preemptions == 1 and stats.resumes == 1
+    assert out[2].ttft < base_ttft            # preemption beat the queue
+    assert out[0].preempted == 1 and out[1].preempted == 1
+    # bitwise-identical continuation: park/resume lost nothing
+    assert list(out[0].output) == ref_out[0]
+    assert list(out[1].output) == ref_out[1]
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_preempt_resumes_into_different_slot(key, paged):
+    """A parked group resumes into whichever slot empties first — not
+    necessarily the one it was parked from — and still continues bitwise
+    (backbone batch rows are independent; under paging the block-table row
+    re-attaches to the new slot index)."""
+    cfg = dataclasses.replace(_cfg(), serving=_serving_cfg(paged))
+    params = Backbone.init(key, cfg)
+    # slot 0: long batch victims; slot 1: short batch work that drains
+    # while the latency request occupies slot 0
+    victims = _slo_requests([(2, 22, 0, "batch"), (2, 22, 0, "batch")])
+    others = _slo_requests([(2, 5, 0, "batch"), (2, 5, 0, "batch")],
+                           seed=1)
+    others = [dataclasses.replace(r, rid=2 + r.rid) for r in others]
+    lat = Request(rid=4, prompt=others[0].prompt.copy(), max_new_tokens=26,
+                  arrival=2, slo="latency")
+
+    def build(preempt):
+        c = dataclasses.replace(
+            cfg, serving=dataclasses.replace(cfg.serving, preempt=preempt))
+        return ContinuousScheduler(Engine(params, c, batch=2, max_len=96))
+
+    ref = build(preempt=False)
+    ref.run([r.fresh() for r in victims + others])
+    ref_out = {q.rid: list(q.output) for q in ref.finished}
+
+    pre = build(preempt=True)
+    stats = pre.run([r.fresh() for r in victims + others] + [lat.fresh()])
+    out = {q.rid: list(q.output) for q in pre.finished}
+
+    assert stats.finished == 5
+    assert stats.preemptions >= 1 and stats.resumes == stats.preemptions
+    assert out[0] == ref_out[0] and out[1] == ref_out[1]
+    assert len(out[4]) == 26
+
+
+def test_parked_reservation_cannot_livelock_pool(key):
+    """Regression: when the queue head outranks the oldest parked group
+    but can never fit while that group's pages stay reserved, resumption
+    must proceed anyway — head-yields-unconditionally would spin the
+    scheduler forever (head unadmittable, group never resumed)."""
+    cfg = get_smoke_config("qwen1.5-4b", mux_n=1)
+    serving = ServingConfig(paged=True, page_size=2, pool_pages=13,
+                            policy="slo", preempt=True)
+    cfg = dataclasses.replace(cfg, serving=serving)
+    params = Backbone.init(key, cfg)
+    eng = Engine(params, cfg, batch=2, max_len=18)
+    sched = ContinuousScheduler(eng)
+    reqs = _slo_requests([
+        (2, 12, 0, "batch"),      # r0: parked by the first latency arrival
+        (2, 4, 0, "batch"),       # r1: drains the other slot
+        (2, 2, 2, "latency"),     # r2: preempts r0 (fits beside its reserve)
+        (2, 16, 3, "latency"),    # r3: outranks parked r0 but can only fit
+                                  #     after r0 resumes, finishes, and
+                                  #     releases its reservation
+    ], vocab=cfg.vocab)
+    stats = sched.run([r.fresh() for r in reqs], max_steps=400)
+    assert stats.finished == 4, \
+        f"livelock: only {stats.finished}/4 finished in {stats.decode_steps}"
+    assert stats.preemptions == 1 and stats.resumes == 1
+    r = {q.rid: q for q in sched.finished}
+    assert len(r[0].output) == 12 and len(r[3].output) == 16
+
+
+def test_preempt_never_evicts_peer_or_higher_class(key):
+    """A batch-class arrival never parks anyone, and a latency-class
+    arrival never parks a slot holding another latency lane."""
+    cfg = dataclasses.replace(_cfg(), serving=_serving_cfg(False))
+    params = Backbone.init(key, cfg)
+    sched = ContinuousScheduler(Engine(params, cfg, batch=1, max_len=64))
+    occupants = _slo_requests([(2, 12, 0, "latency"), (2, 12, 0, "batch")])
+    late = _slo_requests([(2, 2, 3, "latency"), (2, 2, 3, "batch")],
+                         seed=1)
+    late = [dataclasses.replace(r, rid=2 + r.rid) for r in late]
+    stats = sched.run([r.fresh() for r in occupants + late])
+    # the lone slot holds a latency lane -> shielded; everyone queues
+    assert stats.preemptions == 0
+    assert stats.finished == 4
+
+
+# ---------------------------------------------------------------------------
+# Exact horizon accounting (ISSUE 5: tight-pool admitted-earlier regression)
+# ---------------------------------------------------------------------------
+
+def test_exact_horizons_admit_inside_inflight_ramp(key):
+    """A prompt that rides entirely inside a co-lane's in-flight chunked
+    ramp costs the slot nothing extra, so exact accounting admits it the
+    step it arrives on a cache the conservative ``Lp - ceil(Lp/C)`` bump
+    provably refused (PR 4 bumped the ramping lane's horizon past
+    max_len)."""
+    C = 4
+    cfg = dataclasses.replace(
+        _cfg(), serving=ServingConfig(prefill_chunk=C))
+    params = Backbone.init(key, cfg)
+    # ramping lane: lp=16, gen=2 -> horizon prefix+18; candidate at t=2:
+    # lp=8, gen=2 rides the remaining 8-token ramp exactly.
+    eng = Engine(params, cfg, batch=1, max_len=19)
+    sched = ContinuousScheduler(eng)
+    reqs = _slo_requests([(16, 2, 0, "batch"), (8, 2, 2, "batch")])
+    P = cfg.mux.prefix_len
+    max_len = eng.max_len
+
+    # the PR 4 conservative arithmetic at the candidate's arrival (t=2,
+    # pos=P+8, ramp remainder 8): the co-lane bump alone overflows
+    ramp_end = P + 16 + 2
+    bump = ramp_end + (8 - -(-8 // C))
+    cons_end = (P + 8) + max(8, 8) + 2
+    assert max(cons_end, bump) > max_len, "scenario no longer tight"
+
+    stats = sched.run([r.fresh() for r in reqs])
+    r = {q.rid: q for q in sched.finished}
+    assert stats.finished == 2
+    # exact accounting admits the moment the request arrives
+    assert r[1].admitted_step == 2
+    # ...and the exact horizon was honest: nothing overran the cache
+    assert int(sched.pos.max()) <= max_len
+
+
+def test_ttft_percentiles_and_per_class_stats(key):
+    """``run`` fills TTFT p50/p99 and per-SLO-class completion stats."""
+    cfg = dataclasses.replace(_cfg(), serving=_serving_cfg(False))
+    params = Backbone.init(key, cfg)
+    sched = ContinuousScheduler(Engine(params, cfg, batch=2, max_len=64))
+    trace = poisson_trace(12, rate=1.5, prompt_len=2, gen_len=4,
+                          vocab=cfg.vocab, max_total=30, seed=5,
+                          slo_mix=0.3)
+    stats = sched.run(trace)
+    assert stats.finished == 12
+    assert stats.ttft_p50 >= 0 and stats.ttft_p99 >= stats.ttft_p50
+    assert set(stats.per_class) <= {"latency", "batch"}
+    total = sum(c["finished"] for c in stats.per_class.values())
+    assert total == 12
+    for name, c in stats.per_class.items():
+        assert 0.0 <= c["deadline_hit_rate"] <= 1.0
+        assert c["ttft_p99"] >= c["ttft_p50"] >= 0
+        assert c["ttft_deadline"] == sched.slo.deadline(name)

@@ -10,7 +10,11 @@ interleaving of arrivals, ramps, chunk widths, priorities, and retirements:
     completes with exactly its generation budget;
   * no page leaks after drain: only the resident prefix pages stay mapped;
   * paged and contiguous engines emit identical tokens on the same trace
-    at the same prefill chunk.
+    at the same prefill chunk;
+  * preempt-and-swap (ISSUE 5): under random two-class traces with
+    ``policy="slo"`` + ``preempt=True``, page conservation extends over the
+    swap ledger's parked rows, no preempted request loses tokens, the
+    ledger drains, and paged == contiguous still holds.
 
 Runs with real ``hypothesis`` when installed (CI) and with the
 deterministic stub in ``conftest.py`` otherwise — both draw from the
@@ -53,38 +57,47 @@ def _trace(rng, n_req, max_lp, max_gen):
     ) for i in range(n_req)]
 
 
-def _check_page_conservation(alloc):
-    """Free list + mapped rows partition the usable pages exactly."""
-    table = alloc.table
+def _check_page_conservation(sched):
+    """Free list + mapped rows + swap-ledger parked rows partition the
+    usable pages exactly — a parked group's pages stay resident but leave
+    the table, so conservation must extend over the ledger."""
+    table = sched.allocator.table
     mapped = [int(p) for p in table.rows.ravel() if p >= 0]
-    assert len(mapped) == len(set(mapped)), "page double-mapped"
-    assert 0 not in mapped, "trash page mapped"
+    parked = [int(p) for g in sched.ledger
+              for p in g.payload.row if p >= 0]
+    held = mapped + parked
+    assert len(held) == len(set(held)), "page double-mapped"
+    assert 0 not in held, "trash page mapped"
     free = set(table.free)
-    assert not free.intersection(mapped), "page both free and mapped"
-    assert len(free) + len(mapped) == table.usable_pages, "page lost"
-    assert table.pages_in_use == len(mapped)
+    assert not free.intersection(held), "page both free and held"
+    assert len(free) + len(held) == table.usable_pages, "page lost"
+    assert table.pages_in_use == len(held)
 
 
 def _drive(sched, trace, *, max_steps=3000):
     """Replay like ``run`` but assert invariants after every step."""
     for r in trace:
         sched.submit(r)
-    while sched._waiting() or sched.table.live_requests():
+    while sched._waiting() or sched.table.live_requests() or \
+            len(sched.ledger):
         assert sched.stats.decode_steps < max_steps, "trace failed to drain"
         nxt = sched._next_arrival()
-        if not sched.table.live_requests() and nxt is not None and \
-                nxt > sched.t:
+        if not sched.table.live_requests() and not len(sched.ledger) and \
+                nxt is not None and nxt > sched.t:
             sched.t = nxt
         sched.step()
         live = sched.table.live_requests()
         assert len(live) == len(set(live)), "lane serves two requests"
+        parked = sched.ledger.live_requests()
+        assert not set(live) & set(parked), "request both live and parked"
         # Occupied slots never write past the cache; empty slots' pos may
         # drift (it rewinds on the next admission / drain reset).
         occupied = sched.table.lane_mask().sum(axis=1) > 0
         assert (sched.pos[occupied] <= sched.engine.max_len).all(), \
             "live slot overran cache"
         if sched.paged:
-            _check_page_conservation(sched.allocator)
+            _check_page_conservation(sched)
+    assert len(sched.ledger) == 0, "parked group never resumed"
     return {q.rid: list(q.output) for q in sched.finished}
 
 
@@ -126,6 +139,53 @@ def test_fuzz_trace_invariants(seed, chunk, page_size, policy):
     assert table.pages_in_use == keep
     assert table.free_pages == table.usable_pages - keep
     assert sched_p.stats.peak_pages <= table.usable_pages
+
+
+@settings(max_examples=4, deadline=None, derandomize=True)
+@given(seed=st.integers(0, 10_000), chunk=st.integers(1, 3))
+def test_fuzz_preempt_resume_invariants(seed, chunk):
+    """Random two-class traces with preempt-and-swap on: every page is
+    free, mapped, or parked (never lost or doubled) at every step, no
+    preempted request loses tokens, the ledger drains, and paged ==
+    contiguous token-for-token (the pool is sized so paged accounting
+    never refuses what contiguous admits, isolating preemption itself)."""
+    rng = np.random.default_rng(seed)
+    trace = _trace(rng, n_req=int(rng.integers(5, 10)), max_lp=5, max_gen=8)
+    for r in trace:
+        r.slo = "latency" if rng.random() < 0.4 else "batch"
+    max_len = CFG.mux.prefix_len + 4 * (5 + 8)
+    page_size = 4
+    from repro.serving.paging import pages_for
+    pool = 2 * N_SLOTS * pages_for(max_len, page_size) + 1
+
+    def build(paged):
+        serving = ServingConfig(paged=paged, page_size=page_size,
+                                pool_pages=pool if paged else 0,
+                                prefill_chunk=chunk, policy="slo",
+                                preempt=True)
+        cfg = dataclasses.replace(CFG, serving=serving)
+        eng = Engine(PARAMS, cfg, batch=N_SLOTS, max_len=max_len)
+        return ContinuousScheduler(eng)
+
+    sched_c = build(paged=False)
+    out_c = _drive(sched_c, [r.fresh() for r in trace])
+    sched_p = build(paged=True)
+    out_p = _drive(sched_p, [r.fresh() for r in trace])
+
+    # no token loss through park/resume: every request completes with
+    # exactly its budget, preempted or not
+    for r in trace:
+        assert len(out_c[r.rid]) == r.max_new_tokens
+    assert out_c == out_p
+    assert sched_c.stats.preemptions == sched_c.stats.resumes
+    assert sched_p.stats.preemptions == sched_p.stats.resumes
+    assert sched_p.stats.preemptions == sched_c.stats.preemptions
+
+    # no page leak after drain: parked rows returned, prefix pages resident
+    table = sched_p.allocator.table
+    keep = sched_p.allocator.n_prefix_pages * N_SLOTS
+    assert table.pages_in_use == keep
+    assert table.free_pages == table.usable_pages - keep
 
 
 @settings(max_examples=3, deadline=None, derandomize=True)
