@@ -106,7 +106,8 @@ def run(*, n=4, batch=2, num_requests=16, rate=2.0, prompt_len=4,
     t0 = time.time()
     stats_p = sched_p.run(_fresh(long_trace))
     dt_p = time.time() - t0
-    table = sched_p.allocator.table
+    load = stats_p.final_load           # pool occupancy from the public
+                                        # SchedulerLoad probe, not the table
     assert stats_p.finished == len(long_trace), \
         f"paged run finished {stats_p.finished}/{len(long_trace)}"
     peak_bytes = paged_cache_bytes(
@@ -130,7 +131,7 @@ def run(*, n=4, batch=2, num_requests=16, rate=2.0, prompt_len=4,
             "decode_steps": stats_p.decode_steps,
             "tok_per_s": round(stats_p.generated_tokens / dt_p, 1),
             "peak_pool_pages": stats_p.peak_pages,
-            "usable_pages": table.usable_pages,
+            "usable_pages": load.usable_pages,
             "page_bytes": sched_p.allocator.page_bytes(),
             "peak_cache_bytes": peak_bytes,
             "slot_resets": stats_p.slot_resets,
@@ -143,7 +144,7 @@ def run(*, n=4, batch=2, num_requests=16, rate=2.0, prompt_len=4,
           f"clipped trace, {contig_bytes} cache bytes reserved")
     print(f"  paged:      completes all {stats_p.finished} requests in "
           f"{stats_p.decode_steps} steps / {payload['paged']['tok_per_s']} "
-          f"tok/s, peak {stats_p.peak_pages}/{table.usable_pages} pages "
+          f"tok/s, peak {stats_p.peak_pages}/{load.usable_pages} pages "
           f"({peak_bytes} bytes at peak)")
     common.save("serving_paged", payload)
 

@@ -14,8 +14,8 @@ import time
 
 from benchmarks import (heads_ablation, image_mux, index_variance,
                         memory_overhead, mux_strategies, paging,
-                        retrieval_acc, roofline, small_models, task_acc_vs_n,
-                        throughput_vs_n)
+                        retrieval_acc, roofline, router, small_models,
+                        task_acc_vs_n, throughput_vs_n)
 
 SUITES = {
     "fig3": task_acc_vs_n.run,        # task acc vs N
@@ -31,6 +31,7 @@ SUITES = {
     "serving": throughput_vs_n.run_continuous,  # continuous vs static batching
     "paging": paging.run,             # paged vs contiguous KV cache
     "preempt": paging.run_preempt,    # preempt-and-swap SLO classes
+    "router": router.run,             # replica-router scaling R=1,2,4
 }
 
 

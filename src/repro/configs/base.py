@@ -122,6 +122,26 @@ class ServingConfig:
                               # target in decode steps that EDF admission
                               # orders by and reports attainment against.
                               # Unclassed requests take the last class.
+    min_residency_steps: int = 0
+                              # preemption hysteresis: the eviction policy
+                              # never parks a slot that admitted or resumed
+                              # a request fewer than K steps ago, so a
+                              # flapping outranking class cannot churn the
+                              # same victim every step.  0 = no hysteresis
+                              # (the PR 5 behaviour, bit-for-bit).
+    replicas: int = 1         # replica-router tier (serving/router.py):
+                              # R > 1 runs R independent engine+scheduler
+                              # replicas behind a ReplicaRouter front-end
+                              # that dispatches requests by routing policy.
+    router_policy: str = "round_robin"
+                              # routing policy name: round_robin |
+                              # least_loaded | slo_headroom, or any
+                              # registered custom RoutingPolicy.
+    router_sync: bool = False
+                              # True: every replica steps each router tick
+                              # (lock-step, the SPMD execution shape); False:
+                              # only replicas with live/queued/parked work
+                              # step, idle replicas skip (independent).
 
     def __post_init__(self):
         if self.page_size < 1:
@@ -135,6 +155,15 @@ class ServingConfig:
             raise ValueError(
                 f"policy must be a registered admission-policy name, got "
                 f"{self.policy!r}")
+        if self.min_residency_steps < 0:
+            raise ValueError(f"min_residency_steps must be >= 0, got "
+                             f"{self.min_residency_steps}")
+        if self.replicas < 1:
+            raise ValueError(f"replicas must be >= 1, got {self.replicas}")
+        if not self.router_policy or not isinstance(self.router_policy, str):
+            raise ValueError(
+                f"router_policy must be a registered routing-policy name, "
+                f"got {self.router_policy!r}")
         if not self.slo_classes:
             raise ValueError("slo_classes needs at least one (name, "
                              "deadline) pair")

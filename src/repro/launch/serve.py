@@ -34,10 +34,43 @@ percentiles and per-class deadline attainment):
 
     PYTHONPATH=src python -m repro.launch.serve --smoke --workload poisson \
         --paged --policy slo --preempt --slo-mix 0.25 --report --gen 8
+
+Replica router (multi-engine tier: R independent engine+scheduler replicas
+behind one front door, requests dispatched by a pluggable routing policy,
+stats aggregated across the fleet):
+
+    PYTHONPATH=src python -m repro.launch.serve --smoke --workload poisson \
+        --replicas 2 --router-policy least_loaded --report --gen 8
 """
 import argparse
 import os
 import time
+
+
+def _fmt_ttft(v) -> str:
+    """A TTFT percentile of -1 means no request produced a first token
+    (empty trace, all-preempted run): print n/a, not a bogus latency."""
+    return "n/a" if v is None or v < 0 else f"{v:.1f}"
+
+
+def _report_lines(stats) -> list:
+    """``--report`` text from a SchedulerStats or RouterStats — robust to
+    empty/missing SLO classes and to runs with no finished requests."""
+    lines = [f"[serve] ttft: p50 {_fmt_ttft(stats.ttft_p50)} / p99 "
+             f"{_fmt_ttft(stats.ttft_p99)} steps from arrival to first token"]
+    per_class = getattr(stats, "per_class", None) or {}
+    if not per_class:
+        lines.append("[serve]   (no SLO classes configured; per-class "
+                     "attainment skipped)")
+    for name, c in per_class.items():
+        lines.append(
+            f"[serve]   {name:>8}: {c['finished']} finished, "
+            f"ttft p50 {_fmt_ttft(c['ttft_p50'])} "
+            f"p99 {_fmt_ttft(c['ttft_p99'])} "
+            f"(deadline {c['ttft_deadline']}, hit "
+            f"{100 * c['deadline_hit_rate']:.0f}%), "
+            f"{c['preempted']} preemptions")
+    return lines
 
 
 def _run_lockstep(args, cfg, mesh, mi, jax, Backbone, Engine):
@@ -103,22 +136,62 @@ def _run_workload(args, cfg, mesh, mi, jax, Backbone, Engine):
         print(f"[serve] ramp: mean {_np.mean(ramp):.2f} steps from admission "
               f"to first token (max {max(ramp)})")
     if args.report:
-        print(f"[serve] ttft: p50 {stats.ttft_p50:.1f} / p99 "
-              f"{stats.ttft_p99:.1f} steps from arrival to first token")
-        for name, c in stats.per_class.items():
-            print(f"[serve]   {name:>8}: {c['finished']} finished, "
-                  f"ttft p50 {c['ttft_p50']:.1f} p99 {c['ttft_p99']:.1f} "
-                  f"(deadline {c['ttft_deadline']}, hit "
-                  f"{100 * c['deadline_hit_rate']:.0f}%), "
-                  f"{c['preempted']} preemptions")
+        for line in _report_lines(stats):
+            print(line)
     if cfg.serving.paged:
-        table = sched.allocator.table
-        print(f"[serve] pool: peak {table.peak_in_use}/{table.usable_pages} "
+        load = stats.final_load
+        print(f"[serve] pool: peak {stats.peak_pages}/{load.usable_pages} "
               f"pages ({sched.allocator.page_bytes()} B/page), "
-              f"{table.pages_in_use} in use after drain")
+              f"{load.pages_in_use} in use after drain")
     print(f"[serve] static baseline: {static} decode steps "
           f"(continuous saves {100 * (1 - stats.decode_steps / static):.0f}%"
           f" on this trace)" if static else "[serve] static baseline: n/a")
+    if stats.finished != args.num_requests:
+        raise SystemExit(
+            f"[serve] FAIL: only {stats.finished}/{args.num_requests} "
+            f"requests completed")
+
+
+def _run_router(args, cfg, mesh, mi, jax, Backbone, Engine):
+    """Poisson trace through the replica router: R independent
+    engine+scheduler replicas, load-aware dispatch, aggregated report."""
+    from repro.serving.router import ReplicaRouter
+    from repro.serving.scheduler import poisson_trace
+    key = jax.random.PRNGKey(0)
+    params = Backbone.init(key, cfg)
+    n = max(cfg.mux.n, 1)
+    max_total = args.prompt_len * 2 + args.gen * 4 + 1
+    with mesh:
+        router = ReplicaRouter.build(
+            params, cfg, batch=args.batch, max_len=max_total,
+            replicas=args.replicas, mesh=mesh, mesh_info=mi)
+        trace = poisson_trace(
+            args.num_requests, rate=args.rate, prompt_len=args.prompt_len,
+            gen_len=args.gen, vocab=cfg.vocab, max_total=max_total,
+            seed=args.seed, slo_mix=args.slo_mix)
+        t0 = time.time()
+        stats = router.run(trace)
+        dt = time.time() - t0
+    lanes = args.batch * n
+    print(f"[serve] router: {args.num_requests} requests over "
+          f"{stats.replicas} replicas x {lanes} lanes "
+          f"({args.batch} slots x {n}), policy={stats.policy}"
+          + (", sync" if stats.sync else "")
+          + (f", paged (page_size={cfg.serving.page_size})"
+             if cfg.serving.paged else ""))
+    print(f"[serve] fleet: {stats.router_steps} router steps, "
+          f"{stats.generated_tokens} tokens in {dt:.2f}s "
+          f"({stats.tokens_per_step:.2f} tok/step, "
+          f"{stats.generated_tokens / max(dt, 1e-9):.0f} tok/s wall), "
+          f"{stats.requeues} backpressure requeues")
+    for i, rep in enumerate(stats.per_replica):
+        print(f"[serve]   replica {i}: {rep['dispatched']} dispatched, "
+              f"{rep['finished']} finished, {rep['decode_steps']} steps, "
+              f"occupancy {rep['mean_occupancy']:.2f}, "
+              f"{rep['preemptions']} preemptions")
+    if args.report:
+        for line in _report_lines(stats):
+            print(line)
     if stats.finished != args.num_requests:
         raise SystemExit(
             f"[serve] FAIL: only {stats.finished}/{args.num_requests} "
@@ -172,6 +245,16 @@ def main(argv=None):
     ap.add_argument("--report", action="store_true",
                     help="print TTFT percentiles and per-SLO-class "
                          "completion stats after the run")
+    # replica router (serving/router.py)
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="engine+scheduler replicas behind the router "
+                         "(>1 enables the replica-router serving tier)")
+    ap.add_argument("--router-policy", default="round_robin",
+                    help="routing policy: round_robin | least_loaded | "
+                         "slo_headroom (or any registered name)")
+    ap.add_argument("--router-sync", action="store_true",
+                    help="step every replica each router tick (lock-step) "
+                         "instead of skipping idle replicas")
     args = ap.parse_args(argv)
     workload = args.workload == "poisson"
     if args.batch is None:
@@ -204,18 +287,22 @@ def main(argv=None):
     getter = get_smoke_config if args.smoke else get_config
     cfg = getter(args.arch, mux_n=args.mux_n)
     if (args.paged or args.prefill_chunk > 1 or args.policy != "fifo"
-            or args.preempt):
+            or args.preempt or args.replicas > 1):
         import dataclasses
         from repro.configs.base import ServingConfig
         cfg = dataclasses.replace(cfg, serving=ServingConfig(
             paged=args.paged, page_size=args.page_size,
             pool_pages=args.pool_pages,
             prefill_chunk=args.prefill_chunk,
-            policy=args.policy, preempt=args.preempt))
+            policy=args.policy, preempt=args.preempt,
+            replicas=args.replicas, router_policy=args.router_policy,
+            router_sync=args.router_sync))
     print(f"[serve] {cfg.name} N={cfg.mux.n} on mesh "
           f"{dict(zip(mesh.axis_names, mesh.devices.shape))}")
 
-    if args.workload == "poisson":
+    if args.workload == "poisson" and args.replicas > 1:
+        _run_router(args, cfg, mesh, mi, jax, Backbone, Engine)
+    elif args.workload == "poisson":
         _run_workload(args, cfg, mesh, mi, jax, Backbone, Engine)
     else:
         _run_lockstep(args, cfg, mesh, mi, jax, Backbone, Engine)

@@ -8,9 +8,11 @@ from repro.serving.policies import (AdmissionPolicy, EvictionPolicy,
                                     SamplingPolicy, SloClasses,
                                     register_admission, register_eviction,
                                     register_sampling)
+from repro.serving.router import (ReplicaRouter, RouterStats, RoutingPolicy,
+                                  get_routing, list_routing, register_routing)
 from repro.serving.scheduler import (ContinuousScheduler, Request,
-                                     SchedulerStats, poisson_trace,
-                                     static_batch_steps)
+                                     SchedulerLoad, SchedulerStats,
+                                     poisson_trace, static_batch_steps)
 from repro.serving.slots import ParkedGroup, SlotTable, SwapLedger
 
 __all__ = [
@@ -20,7 +22,9 @@ __all__ = [
     "PagedKVSlotAllocator", "PagedPark", "PageTable", "pages_for",
     "AdmissionPolicy", "EvictionPolicy", "SamplingPolicy", "SloClasses",
     "register_admission", "register_eviction", "register_sampling",
-    "ContinuousScheduler", "Request", "SchedulerStats", "poisson_trace",
-    "static_batch_steps",
+    "ContinuousScheduler", "Request", "SchedulerLoad", "SchedulerStats",
+    "poisson_trace", "static_batch_steps",
+    "ReplicaRouter", "RouterStats", "RoutingPolicy",
+    "register_routing", "get_routing", "list_routing",
     "SlotTable", "ParkedGroup", "SwapLedger",
 ]

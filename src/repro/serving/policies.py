@@ -132,15 +132,21 @@ class SloClasses:
         self._rank = {name: i for i, name in enumerate(self.names)}
 
     def resolve(self, slo: str) -> str:
-        return slo if slo in self._rank else self.names[-1]
+        if slo in self._rank:
+            return slo
+        # No classes configured at all (possible for hand-built instances —
+        # ServingConfig itself requires at least one): every name resolves
+        # to itself with rank 0 / deadline 0, so stats code that iterates
+        # ``names`` simply reports nothing instead of crashing.
+        return self.names[-1] if self.names else slo
 
     def rank(self, slo: str) -> int:
         """0 = highest class; unknown names take the lowest rank."""
-        return self._rank[self.resolve(slo)]
+        return self._rank.get(self.resolve(slo), 0)
 
     def deadline(self, slo: str) -> int:
         """TTFT deadline (scheduler steps from arrival) for the class."""
-        return self.deadlines[self.resolve(slo)]
+        return self.deadlines.get(self.resolve(slo), 0)
 
 
 # ---------------------------------------------------------------------------

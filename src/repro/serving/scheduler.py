@@ -64,7 +64,7 @@ from repro.serving.engine import Engine, ServeState
 from repro.serving.kvcache import KVSlotAllocator
 from repro.serving.paging import PagedKVSlotAllocator, pages_for
 from repro.serving.policies import SloClasses
-from repro.serving.slots import ParkedGroup, SlotTable, SwapLedger
+from repro.serving.slots import FREE, ParkedGroup, SlotTable, SwapLedger
 
 
 @dataclasses.dataclass
@@ -174,6 +174,46 @@ def static_batch_steps(requests: list[Request], n_slots: int,
     return total
 
 
+@dataclasses.dataclass(frozen=True)
+class SchedulerLoad:
+    """Point-in-time load/headroom snapshot of one ``ContinuousScheduler``.
+
+    The public probe the replica router (``serving/router.py``) dispatches
+    against — free lanes, free pages, and admission-horizon headroom in one
+    read — so nothing outside the scheduler reaches into ``allocator.table``
+    or ``lane_end``.  Horizons come from the exact ``_sim_ends`` ramp
+    simulation, the same arithmetic admission itself uses.
+
+    Paged-only fields (``usable_pages``/``pages_in_use``) are 0 under the
+    contiguous allocator; ``free_pages`` then equals ``free_positions``
+    (one-position pages).  ``free_pages`` is *admission* headroom — usable
+    pages minus every live slot's worst-case horizon footprint and the swap
+    ledger's parked reservations — not the raw free list, so a router
+    reading it sees what a new request could actually claim.
+    """
+    free_lanes: int        # unoccupied (slot, lane) cells
+    total_lanes: int       # n_slots * n_lanes
+    free_slots: int        # fully empty slots (admit at prefix_len)
+    waiting: int           # requests queued at this scheduler
+    parked: int            # groups in the swap ledger
+    free_pages: int        # pages a new request could claim (net of
+                           # horizons + parked reservations); may be < 0
+                           # transiently when horizons tighten mid-round
+    usable_pages: int      # paged: pool_pages - trash; contiguous: 0
+    pages_in_use: int      # paged: pages actually mapped; contiguous: 0
+    free_positions: int    # free_pages in positions (page_size multiple)
+    headroom: int          # best single-request admission headroom in
+                           # positions: max over slots with a free lane of
+                           # max_len - slot horizon (0 when no lane is free)
+
+    @property
+    def lane_utilization(self) -> float:
+        return 1.0 - self.free_lanes / max(1, self.total_lanes)
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
 @dataclasses.dataclass
 class SchedulerStats:
     decode_steps: int = 0
@@ -190,6 +230,7 @@ class SchedulerStats:
     ttft_p50: float = -1.0              # time-to-first-token percentiles
     ttft_p99: float = -1.0              #   (filled by ``run``)
     per_class: dict = dataclasses.field(default_factory=dict)
+    final_load: Optional[SchedulerLoad] = None  # load snapshot after ``run``
 
     @property
     def mean_occupancy(self) -> float:
@@ -276,6 +317,12 @@ class ContinuousScheduler:
         self.table = SlotTable(self.n_slots, self.n_lanes)
         self.ledger = SwapLedger()
         self.pos = np.full(self.n_slots, self.prefix_len, np.int32)
+        # Preemption hysteresis: the step a slot last admitted or resumed a
+        # request.  With ``min_residency_steps`` K > 0 the eviction policy
+        # never parks a slot younger than K steps — a flapping latency
+        # class cannot churn the same batch victim every step.
+        self.min_residency = cfg.serving.min_residency_steps
+        self.slot_since = np.full(self.n_slots, -(1 << 60), np.int64)
         # Per-lane end-position horizon (exclusive; -1 = free lane),
         # refreshed from the exact ramp simulation each admission round:
         # the paged admission check sizes every slot's worst-case footprint
@@ -289,7 +336,10 @@ class ContinuousScheduler:
 
     # -- queue (delegated to the admission policy) -----------------------------
 
-    def submit(self, req: Request) -> None:
+    def accepts(self, req: Request) -> Optional[str]:
+        """None when this scheduler could ever hold ``req``, else the
+        refusal reason — the submit-time fast-fail as a non-raising probe,
+        so a router can test heterogeneous replicas before dispatching."""
         need = self.prefix_len + len(req.prompt) + req.max_new_tokens
         if need > self.engine.max_len:
             hint = ("raise Engine max_len — under paging the table width is "
@@ -297,9 +347,8 @@ class ContinuousScheduler:
                     if self.paged else
                     "raise Engine max_len or clip the trace (paged "
                     "attention — cfg.serving.paged — is the real fix)")
-            raise ValueError(
-                f"request {req.rid} needs {need} positions but the cache "
-                f"holds {self.engine.max_len}; {hint}")
+            return (f"request {req.rid} needs {need} positions but the cache "
+                    f"holds {self.engine.max_len}; {hint}")
         if self.paged:
             # A request that cannot fit even with every other slot drained
             # to its prefix pages would starve in the queue forever.
@@ -307,11 +356,18 @@ class ContinuousScheduler:
             floor = ((self.n_slots - 1) * alloc.n_prefix_pages
                      + pages_for(need, alloc.page_size))
             if floor > alloc.table.usable_pages:
-                raise ValueError(
-                    f"request {req.rid} needs {pages_for(need, alloc.page_size)} "
+                return (
+                    f"request {req.rid} needs "
+                    f"{pages_for(need, alloc.page_size)} "
                     f"pages but the pool can never free more than "
                     f"{alloc.table.usable_pages - (self.n_slots - 1) * alloc.n_prefix_pages}"
                     f"; raise serving.pool_pages")
+        return None
+
+    def submit(self, req: Request) -> None:
+        reason = self.accepts(req)
+        if reason is not None:
+            raise ValueError(reason)
         self.requests[req.rid] = req
         self.admission.push(req)
 
@@ -427,6 +483,60 @@ class ContinuousScheduler:
             total += need
         return total <= alloc.table.usable_pages
 
+    # -- load probe ------------------------------------------------------------
+
+    def load(self) -> SchedulerLoad:
+        """Snapshot free lanes / free pages / admission-horizon headroom.
+
+        Horizons are refreshed through the exact ramp simulation first, so
+        the snapshot agrees with what the next admission round would see.
+        ``benchmarks`` and ``launch/serve.py`` read pool occupancy from
+        here instead of recomputing it from ``allocator.table``."""
+        self._refresh_horizons()
+        grid = self.table.grid
+        total_lanes = self.n_slots * self.n_lanes
+        free_lanes = int((grid == FREE).sum())
+        free_slots = sum(self.table.slot_empty(s)
+                         for s in range(self.n_slots))
+        # Best single-request headroom: an empty slot admits at prefix_len;
+        # a live slot with a free lane admits in-stream at its horizon.
+        # Slots with no free lane cannot admit at all.
+        headroom = 0
+        slot_room = []
+        for s in range(self.n_slots):
+            if self.table.slot_empty(s):
+                room = self.engine.max_len - self.prefix_len
+                has_lane = True
+            else:
+                room = self.engine.max_len - int(self.lane_end[s].max())
+                has_lane = bool((grid[s] == FREE).any())
+            slot_room.append(max(0, room))
+            if has_lane:
+                headroom = max(headroom, max(0, room))
+        if self.paged:
+            alloc = self.allocator
+            committed = self.ledger.reserved_pages()
+            for s in range(self.n_slots):
+                allocated = int(alloc.table.n_allocated[s])
+                horizon = int(self.lane_end[s].max())
+                need = allocated
+                if horizon > 0:
+                    need = max(need, pages_for(horizon, alloc.page_size))
+                committed += need
+            free_pages = alloc.table.usable_pages - committed
+            free_positions = max(0, free_pages) * alloc.page_size
+            usable, in_use = alloc.table.usable_pages, alloc.table.pages_in_use
+            headroom = min(headroom, free_positions)
+        else:
+            free_positions = sum(slot_room)
+            free_pages, usable, in_use = free_positions, 0, 0
+        return SchedulerLoad(
+            free_lanes=free_lanes, total_lanes=total_lanes,
+            free_slots=free_slots, waiting=self._waiting(),
+            parked=len(self.ledger), free_pages=free_pages,
+            usable_pages=usable, pages_in_use=in_use,
+            free_positions=free_positions, headroom=headroom)
+
     # -- admission -------------------------------------------------------------
 
     def _admit(self) -> None:
@@ -482,6 +592,7 @@ class ContinuousScheduler:
             if pos != int(self.pos[s]):
                 to_reset[s] = True
             self.table.occupy(s, l, req.rid)
+            self.slot_since[s] = self.t
             # Exact bookkeeping for every lane the admission touches: the
             # co-lanes' ends move only as far as the simulation says (zero
             # when an in-flight ramp already covers the new prompt).
@@ -496,10 +607,16 @@ class ContinuousScheduler:
 
     def _park_candidates(self, target: dict) -> list:
         """Slots eligible to park: live lanes, untouched this admission
-        round (no planned admissions or resumes to unwind)."""
+        round (no planned admissions or resumes to unwind), and — under
+        ``min_residency_steps`` K — resident at least K steps since their
+        last admission or resume (hysteresis: a freshly resumed victim is
+        shielded, so a flapping outranking class cannot churn it)."""
         out = []
         for s in range(self.n_slots):
             if s in target or self.table.slot_empty(s):
+                continue
+            if (self.min_residency and
+                    self.t - int(self.slot_since[s]) < self.min_residency):
                 continue
             reqs = [self.requests[int(r)] for r in self.table.grid[s]
                     if r >= 0]
@@ -604,6 +721,7 @@ class ContinuousScheduler:
             for l, e in zip(idx, ends):
                 self.lane_end[slot, l] = e
             target[slot] = group.pos
+            self.slot_since[slot] = self.t
             self.stats.resumes += 1
 
     # -- one decode step --------------------------------------------------------
@@ -787,4 +905,5 @@ class ContinuousScheduler:
                 self.t = nxt
             self.step()
         self.stats.finalize(self.finished, self.slo)
+        self.stats.final_load = self.load()
         return self.stats

@@ -476,3 +476,86 @@ def test_ttft_percentiles_and_per_class_stats(key):
         assert 0.0 <= c["deadline_hit_rate"] <= 1.0
         assert c["ttft_p99"] >= c["ttft_p50"] >= 0
         assert c["ttft_deadline"] == sched.slo.deadline(name)
+
+
+# ---------------------------------------------------------------------------
+# Preemption hysteresis (ISSUE 6: min_residency_steps)
+# ---------------------------------------------------------------------------
+
+def test_min_residency_stops_victim_churn(key):
+    """A flapping latency class — short requests arriving every few steps
+    over a grid held by long batch generations — churns the same batch
+    victim on every flap under ``min_residency_steps=0``.  With K > 0 a
+    slot that admitted or resumed fewer than K steps ago is shielded from
+    eviction, so the churn is bounded (and a K longer than the flap period
+    eliminates preemption entirely); every request still completes."""
+    cfg = _cfg()
+    params = Backbone.init(key, cfg)
+    victims = _slo_requests([(2, 24, 0, "batch"), (2, 24, 0, "batch")])
+    flaps = _slo_requests([(1, 2, 4 + 6 * k, "latency") for k in range(4)],
+                          seed=1)
+    flaps = [dataclasses.replace(r, rid=2 + r.rid) for r in flaps]
+    trace = victims + flaps
+
+    def run(k):
+        serving = dataclasses.replace(_serving_cfg(False),
+                                      min_residency_steps=k)
+        sched = ContinuousScheduler(
+            Engine(params, dataclasses.replace(cfg, serving=serving),
+                   batch=1, max_len=64))
+        stats = sched.run([r.fresh() for r in trace])
+        assert stats.finished == len(trace)
+        return stats, {q.rid: q.preempted for q in sched.finished}
+
+    churn, pre0 = run(0)
+    assert pre0[0] == pre0[1] == 4, \
+        f"flap scenario lost its churn: {pre0}"      # one park per flap
+    damped, pre8 = run(8)
+    assert damped.preemptions < churn.preemptions
+    assert max(pre8[0], pre8[1]) <= 2
+    shielded, pre50 = run(50)
+    assert shielded.preemptions == 0 and pre50[0] == pre50[1] == 0
+
+
+# ---------------------------------------------------------------------------
+# SchedulerLoad probe (ISSUE 6: public load/headroom snapshot)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_load_probe_tracks_admission_capacity(key, paged):
+    """``load()`` reports what admission would actually see: full lanes and
+    headroom on an idle scheduler, shrinking free pages as horizons commit,
+    and a drained pool (plus ``stats.final_load``) after ``run``."""
+    cfg = dataclasses.replace(_cfg(),
+                              serving=_serving_cfg(paged, preempt=False))
+    params = Backbone.init(key, cfg)
+    sched = ContinuousScheduler(Engine(params, cfg, batch=2, max_len=32))
+
+    room = sched.engine.max_len - cfg.mux.prefix_len   # empty-slot headroom
+    idle = sched.load()
+    assert idle.free_lanes == idle.total_lanes == 2 * cfg.mux.n
+    assert idle.free_slots == 2 and idle.waiting == 0 and idle.parked == 0
+    assert idle.headroom == room if not paged else idle.headroom <= room
+    if paged:
+        assert idle.pages_in_use >= 0 and idle.usable_pages > 0
+    else:
+        assert idle.usable_pages == 0 and \
+            idle.free_pages == idle.free_positions
+
+    reqs = _requests([(10, 0), (10, 0)], prompt_len=2)
+    for r in reqs:
+        sched.submit(r)
+    assert sched.load().waiting == 2
+    sched.step()
+    mid = sched.load()
+    assert mid.free_lanes == mid.total_lanes - 2
+    assert mid.free_pages < idle.free_pages      # horizons now committed
+
+    stats = sched.run()
+    assert stats.finished == 2
+    final = stats.final_load
+    assert final.free_lanes == final.total_lanes
+    assert final.waiting == 0 and final.parked == 0
+    if paged:
+        # drained slots release everything but live prefix pages
+        assert final.pages_in_use <= 2 * sched.allocator.n_prefix_pages
