@@ -12,10 +12,10 @@ from __future__ import annotations
 import sys
 import time
 
-from benchmarks import (heads_ablation, image_mux, index_variance,
-                        memory_overhead, mux_strategies, paging,
-                        retrieval_acc, roofline, router, small_models,
-                        task_acc_vs_n, throughput_vs_n)
+from benchmarks import (decode_kernel, heads_ablation, image_mux,
+                        index_variance, memory_overhead, mux_strategies,
+                        paging, retrieval_acc, roofline, router,
+                        small_models, task_acc_vs_n, throughput_vs_n)
 
 SUITES = {
     "fig3": task_acc_vs_n.run,        # task acc vs N
@@ -32,6 +32,7 @@ SUITES = {
     "paging": paging.run,             # paged vs contiguous KV cache
     "preempt": paging.run_preempt,    # preempt-and-swap SLO classes
     "router": router.run,             # replica-router scaling R=1,2,4
+    "decode_kernel": decode_kernel.run,  # K-block grid + fused demux
 }
 
 

@@ -99,6 +99,22 @@ class ServingConfig:
                               # (batch * ceil(max_len / page_size) + 1)
     use_kernel: bool = False  # route paged decode attention through the
                               # Pallas gather kernel instead of the jnp ref
+    kblock_pages: int = 1     # block-table entries the paged kernel spans
+                              # per grid step: one invocation assembles a
+                              # (kblock_pages * page_size, hd) K tile from
+                              # several pool pages (MXU-shaped K-blocks),
+                              # shrinking the grid's K axis by the same
+                              # factor.  1 = page-at-a-time, today's
+                              # behaviour bit-for-bit.  Only meaningful with
+                              # use_kernel; the jnp ref is layout-free.
+    fuse_demux: bool = False  # decode epilogue: run the index-embed demux
+                              # projection as the fused decode kernel (all N
+                              # lanes per program, the shared h·W1h computed
+                              # once) instead of the generic per-lane demux.
+                              # Applies only to prefix-protocol 2-layer
+                              # index_embed demux; other strategies fall
+                              # back to their normal apply.  False = today's
+                              # path bit-for-bit.
     prefill_chunk: int = 1    # prompt-ramp tokens per decode step: an
                               # admitted prompt consumes ~Lp/chunk steps
                               # instead of Lp (the slot's non-ramping lanes
@@ -148,6 +164,9 @@ class ServingConfig:
             raise ValueError(f"page_size must be >= 1, got {self.page_size}")
         if self.pool_pages < 0:
             raise ValueError(f"pool_pages must be >= 0, got {self.pool_pages}")
+        if self.kblock_pages < 1:
+            raise ValueError(
+                f"kblock_pages must be >= 1, got {self.kblock_pages}")
         if self.prefill_chunk < 1:
             raise ValueError(
                 f"prefill_chunk must be >= 1, got {self.prefill_chunk}")
@@ -246,6 +265,14 @@ class ModelConfig:
             from repro.core import strategies
             strategies.get_mux(self.mux.strategy).validate(
                 self.mux, self.d_model)
+        # A K-block that can never fit VMEM fails here with the knob to
+        # turn, not inside Mosaic lowering mid-serve.  Only the Pallas
+        # kernel assembles K-blocks; the jnp ref is layout-free.
+        if self.serving.paged and self.serving.use_kernel:
+            from repro.kernels.tiling import validate_kblock
+            validate_kblock(self.serving.kblock_pages,
+                            self.serving.page_size, self.head_dim_,
+                            itemsize=jnp.dtype(self.dtype).itemsize)
 
     # -- derived -------------------------------------------------------------
 
@@ -268,7 +295,8 @@ class ModelConfig:
             n_kv_heads=self.n_kv_heads, head_dim=self.head_dim_,
             qkv_bias=self.qkv_bias, rope_theta=self.rope_theta,
             causal=self.causal, window=window, use_flash=use_flash,
-            paged_kernel=self.serving.use_kernel)
+            paged_kernel=self.serving.use_kernel,
+            kblock_pages=self.serving.kblock_pages)
 
     # -- layer pattern ---------------------------------------------------------
 

@@ -92,6 +92,10 @@ class DemuxStrategy:
     name: str = ""            # set by @register_demux
     uses_kernel: bool = False
     uses_prefix: bool = False  # True -> prefix protocol + index_embeds input
+    fused_decode: bool = False  # True -> decode_apply is a real fused decode
+                                # epilogue (ServingConfig.fuse_demux routes
+                                # through it); False -> decode_apply falls
+                                # back to the ordinary apply()
 
     # -- construction ---------------------------------------------------------
 
@@ -123,3 +127,11 @@ class DemuxStrategy:
             return self.kernel_apply(params, h, cfg,
                                      index_embeds=index_embeds)
         return self.separate(params, h, cfg, index_embeds=index_embeds)
+
+    def decode_apply(self, params, h, cfg, *, index_embeds=None):
+        """Decode-epilogue demux for a (B, C, d) hidden block, C the decode
+        chunk width.  Strategies with a fused epilogue (``fused_decode``)
+        override this to demux in VMEM (all N lanes per program); the base
+        class falls back to the ordinary ``apply`` so routing through here
+        is always safe regardless of strategy."""
+        return self.apply(params, h, cfg, index_embeds=index_embeds)

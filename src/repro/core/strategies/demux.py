@@ -31,6 +31,7 @@ class IndexEmbedDemux(DemuxStrategy):
 
     uses_kernel = True
     uses_prefix = True
+    fused_decode = True
 
     def init(self, key, cfg, d, *, param_dtype=jnp.float32):
         k1, k2 = jax.random.split(key)
@@ -67,6 +68,15 @@ class IndexEmbedDemux(DemuxStrategy):
         assert index_embeds is not None, "index_embed demux needs index_embeds"
         from repro.kernels.demux import ops as demux_ops
         return demux_ops.index_embed_demux(params["mlp"], h, index_embeds)
+
+    def decode_apply(self, params, h, cfg, *, index_embeds=None):
+        """Fused decode epilogue (``ServingConfig.fuse_demux``): demux the
+        (B, C, d) decode hidden block in VMEM — all N lanes per program,
+        the shared h·W1h computed once per slot.  Deeper shared MLPs
+        (demux_layers != 2) fall back to the jnp reference inside the op."""
+        assert index_embeds is not None, "index_embed demux needs index_embeds"
+        from repro.kernels.demux import ops as demux_ops
+        return demux_ops.decode_demux(params["mlp"], h, index_embeds)
 
 
 @register_demux("mlp")

@@ -20,3 +20,14 @@ def index_embed_demux(mlp_params, h, index_embeds):
         return ref.index_embed_demux(mlp_params, h, index_embeds)
     return kernel.index_embed_demux(mlp_params, h, index_embeds,
                                     interpret=_INTERPRET)
+
+
+def decode_demux(mlp_params, h, index_embeds):
+    """Decode-epilogue fused demux: h (B, C, d) with C the decode chunk
+    width -> (B, N, C, d).  Reached through ``IndexEmbedDemux.decode_apply``
+    when ``ServingConfig.fuse_demux`` is set; falls back to the jnp
+    reference when the shared MLP is not the fused-kernel 2-layer shape."""
+    if set(mlp_params) != {"l0", "l1"}:
+        return ref.index_embed_demux(mlp_params, h, index_embeds)
+    return kernel.decode_demux(mlp_params, h, index_embeds,
+                               interpret=_INTERPRET)

@@ -4,25 +4,43 @@ A C-row query block per backbone slot (C == 1 for plain decode, C > 1 for
 chunked prefill) attends over that slot's KV pages, gathered from the
 shared pool through a scalar-prefetched block table:
 
-  grid (B, KVH, max_pages) — the page axis is the last (fastest) grid dim;
-  the block table rides in SMEM via ``PrefetchScalarGridSpec`` so the
-  K/V/pos BlockSpec index maps can turn a (slot, page-index) grid point
-  into a pool-page DMA before the body runs — the kernel never materialises
-  the gathered (B, S, H, hd) view the jnp reference builds.  Per-row query
-  positions are a regular VMEM input (they gate masking, not DMA).
+  grid (B, KVH, ceil(max_pages / kblock_pages)) — the K-block axis is the
+  last (fastest) grid dim; the block table rides in SMEM via
+  ``PrefetchScalarGridSpec`` so the K/V/pos BlockSpec index maps can turn a
+  (slot, page-index) grid point into a pool-page DMA before the body runs —
+  the kernel never materialises the gathered (B, S, H, hd) view the jnp
+  reference builds.  Per-row query positions are a regular VMEM input (they
+  gate masking, not DMA).
+
+One invocation spans a *K-block* of ``kblock_pages`` consecutive
+block-table entries: the same pool arrays are passed once per block
+position with per-position index maps ``bt[i, p*kblock + j]``, and the body
+concatenates the fetched (ps, hd) tiles into a single
+(kblock_pages·ps, hd) K/V tile for one MXU-shaped dot_general.  At the
+allocator-friendly small page sizes this is what reaches the >=128-row
+tiles the MXU wants — kblock_pages=1 reproduces the historical
+page-at-a-time kernel exactly.
 
 Per-program blocks are (C, n_rep, hd) queries (the GQA group sharing one KV
-head, per chunk row) against one (ps, hd) page, with the canonical
-online-softmax scratch (f32 accumulator + running max / normaliser)
-flushed on the final page.  VMEM claim is O(C·n_rep·hd + ps·hd) —
-independent of both the pool size and the slot's live length.  Unmapped
-pages (block-table entry -1) are clamped to pool page 0 for the DMA and
-masked wholesale in the body, so the streamed bytes are garbage but the
-contribution is an exact zero.
+head, per chunk row) against one K-block, with the canonical online-softmax
+scratch (f32 accumulator + running max / normaliser) flushed on the final
+K-block.  VMEM claim is O(C·n_rep·hd + kblock_pages·ps·hd) — independent of
+both the pool size and the slot's live length; ``kernels.tiling``
+validates the K-block claim against the budget at config time and here.
 
-Decode tiles are small (C·n_rep × ps); on a real TPU the MXU wants
-page_size >= 128 or multi-page K blocks — noted on the roadmap.  Tests run
-interpret mode; numerics match the jnp reference either way.
+Masking: a page's ``pos`` row carries -1 for unwritten entries, and an
+unmapped block-table entry (-1) folds its whole page to -1 positions, so
+both contribute an exact zero through the shared ``k_pos >= 0`` term.
+Unmapped entries are clamped to pool page 0 for the DMA (the streamed bytes
+are garbage but masked); a K-block whose entries are *all* -1 is
+``pl.when``-skipped outright — no dot_generals issued, no garbage streamed
+through the softmax.  The skip changes nothing for any query row with at
+least one valid key anywhere in the slot (a masked block's contribution is
+annihilated exactly: exp(-1e30 - m) underflows to 0.0 and the alpha
+rescale from a NEG_INF running max is an exact 0); rows with *zero* valid
+keys are garbage in every implementation and callers mask those lanes out.
+
+Tests run interpret mode; numerics match the jnp reference either way.
 """
 from __future__ import annotations
 
@@ -34,12 +52,18 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tiling
+
 NEG_INF = -1e30
 
 
-def _paged_kernel(bt_ref, qp_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
-                  acc_ref, m_ref, l_ref, *, scale: float, causal: bool,
-                  window: Optional[int], n_pages: int):
+def _paged_kernel(bt_ref, qp_ref, q_ref, *refs, scale: float, causal: bool,
+                  window: Optional[int], n_blocks: int, kblock: int):
+    k_refs = refs[:kblock]
+    v_refs = refs[kblock:2 * kblock]
+    pos_refs = refs[2 * kblock:3 * kblock]
+    o_ref = refs[3 * kblock]
+    acc_ref, m_ref, l_ref = refs[3 * kblock + 1:]
     i, p = pl.program_id(0), pl.program_id(2)
 
     @pl.when(p == 0)
@@ -48,70 +72,113 @@ def _paged_kernel(bt_ref, qp_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
         l_ref[...] = jnp.zeros(l_ref.shape, jnp.float32)
         acc_ref[...] = jnp.zeros(acc_ref.shape, jnp.float32)
 
-    q = q_ref[0, 0].astype(jnp.float32)           # (C, n_rep, hd)
-    k = k_ref[0, :, 0].astype(jnp.float32)        # (ps, hd)
-    # (C, n_rep, ps): contract hd, no batch dims.
-    s = jax.lax.dot_general(q, k, (((2,), (1,)), ((), ()))) * scale
+    # Block-table entries of this K-block (SMEM scalars; also feed the
+    # BlockSpec index maps, so an in-bounds read is guaranteed: the wrapper
+    # pads the table to a multiple of kblock with -1).
+    bts = [bt_ref[i, p * kblock + j] for j in range(kblock)]
+    mapped_any = bts[0] >= 0
+    for e in bts[1:]:
+        mapped_any = mapped_any | (e >= 0)
 
-    k_pos = pos_ref[...]                          # (1, ps) int32
-    q_pos = qp_ref[0]                             # (C,) int32
-    diff = q_pos[:, None, None] - k_pos[None]     # (C, 1, ps)
-    keep = (k_pos >= 0)[None] & (bt_ref[i, p] >= 0)   # unwritten / unmapped
-    if causal:
-        keep = keep & (diff >= 0)
-    if window is not None:
-        keep = keep & (diff < window)
-    s = jnp.where(keep, s, NEG_INF)               # (C, 1, ps) bcast
+    @pl.when(mapped_any)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)       # (C, n_rep, hd)
+        # Assemble the K-block: kblock (ps, hd) page tiles -> one MXU-shaped
+        # (kblock*ps, hd) tile, then a single dot_general over it.
+        k = jnp.concatenate(
+            [k_refs[j][0, :, 0] for j in range(kblock)],
+            axis=0).astype(jnp.float32)           # (kblock*ps, hd)
+        # (C, n_rep, kblock*ps): contract hd, no batch dims.
+        s = jax.lax.dot_general(q, k, (((2,), (1,)), ((), ()))) * scale
 
-    m_prev, l_prev = m_ref[...], l_ref[...]       # (C, n_rep, 1)
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
-    alpha = jnp.exp(m_prev - m_new)
-    pr = jnp.exp(s - m_new)                       # (C, n_rep, ps)
-    l_ref[...] = l_prev * alpha + jnp.sum(pr, axis=-1, keepdims=True)
-    m_ref[...] = m_new
-    v = v_ref[0, :, 0].astype(jnp.float32)        # (ps, hd)
-    acc_ref[...] = acc_ref[...] * alpha + \
-        jax.lax.dot_general(pr, v, (((2,), (0,)), ((), ())))
+        # Positions, with unmapped pages folded to the -1 sentinel so the
+        # single ``k_pos >= 0`` term masks unwritten AND unmapped entries.
+        k_pos = jnp.concatenate(
+            [jnp.where(bts[j] >= 0, pos_refs[j][...], -1)
+             for j in range(kblock)], axis=1)     # (1, kblock*ps) int32
+        q_pos = qp_ref[0]                         # (C,) int32
+        diff = q_pos[:, None, None] - k_pos[None]  # (C, 1, kblock*ps)
+        keep = (k_pos >= 0)[None]
+        if causal:
+            keep = keep & (diff >= 0)
+        if window is not None:
+            keep = keep & (diff < window)
+        s = jnp.where(keep, s, NEG_INF)           # (C, 1, ·) bcast
 
-    @pl.when(p == n_pages - 1)
+        m_prev, l_prev = m_ref[...], l_ref[...]   # (C, n_rep, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        pr = jnp.exp(s - m_new)                   # (C, n_rep, kblock*ps)
+        l_ref[...] = l_prev * alpha + jnp.sum(pr, axis=-1, keepdims=True)
+        m_ref[...] = m_new
+        v = jnp.concatenate(
+            [v_refs[j][0, :, 0] for j in range(kblock)],
+            axis=0).astype(jnp.float32)           # (kblock*ps, hd)
+        acc_ref[...] = acc_ref[...] * alpha + \
+            jax.lax.dot_general(pr, v, (((2,), (0,)), ((), ())))
+
+    @pl.when(p == n_blocks - 1)
     def _done():
         denom = jnp.maximum(l_ref[...], 1e-30)
         o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("scale", "causal", "window", "interpret"))
+                   static_argnames=("scale", "causal", "window",
+                                    "kblock_pages", "interpret"))
 def paged_decode_attention(q, k_pages, v_pages, pos_pages, block_table,
                            q_pos, *, scale: float, causal: bool = True,
                            window: Optional[int] = None,
+                           kblock_pages: int = 1,
                            interpret: bool = False):
     """q: (B, C, H, hd); k_pages/v_pages: (P, ps, KVH, hd); pos_pages:
     (P, ps) int32; block_table: (B, max_pages) int32; q_pos: (B, C) int32.
-    Returns (B, C, H, hd).  C == 1 is the classic single-token decode."""
+    Returns (B, C, H, hd).  C == 1 is the classic single-token decode.
+
+    ``kblock_pages``: block-table entries spanned per kernel invocation —
+    the grid's K axis shrinks to ceil(max_pages / kblock_pages) and each
+    step runs one (kblock_pages·ps)-row dot_general.  1 = the historical
+    page-at-a-time grid, bit-identical.
+    """
     b, c, h, hd = q.shape
     _, ps, kvh, _ = k_pages.shape
     n_rep = h // kvh
+    kblock = int(kblock_pages)
+    tiling.validate_kblock(kblock, ps, hd, itemsize=k_pages.dtype.itemsize)
     n_pages = block_table.shape[1]
+    pad = -n_pages % kblock
+    bt = block_table.astype(jnp.int32)
+    if pad:
+        # Padded entries are unmapped: masked to exact zero in the body and
+        # skipped entirely when a whole K-block lands in the padding.
+        bt = jnp.pad(bt, ((0, 0), (0, pad)), constant_values=-1)
+    n_blocks = (n_pages + pad) // kblock
     # Head order matches _repeat_kv: q head kv*n_rep + r shares KV head kv.
     qr = q.reshape(b, c, kvh, n_rep, hd).transpose(0, 2, 1, 3, 4)
 
+    def page_spec(j):
+        # Pool-page DMA for K-block position j (static per spec): entry
+        # bt[i, p*kblock + j], clamped to the trash page when unmapped.
+        return pl.BlockSpec(
+            (1, ps, 1, hd),
+            lambda i, jj, p, bt, j=j:
+            (jnp.maximum(bt[i, p * kblock + j], 0), 0, jj, 0))
+
+    def pos_spec(j):
+        return pl.BlockSpec(
+            (1, ps),
+            lambda i, jj, p, bt, j=j:
+            (jnp.maximum(bt[i, p * kblock + j], 0), 0))
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,                    # block_table
-        grid=(b, kvh, n_pages),
+        grid=(b, kvh, n_blocks),
         in_specs=[
             pl.BlockSpec((1, c), lambda i, j, p, bt: (i, 0)),
             pl.BlockSpec((1, 1, c, n_rep, hd),
                          lambda i, j, p, bt: (i, j, 0, 0, 0)),
-            pl.BlockSpec((1, ps, 1, hd),
-                         lambda i, j, p, bt:
-                         (jnp.maximum(bt[i, p], 0), 0, j, 0)),
-            pl.BlockSpec((1, ps, 1, hd),
-                         lambda i, j, p, bt:
-                         (jnp.maximum(bt[i, p], 0), 0, j, 0)),
-            pl.BlockSpec((1, ps),
-                         lambda i, j, p, bt:
-                         (jnp.maximum(bt[i, p], 0), 0)),
-        ],
+        ] + [page_spec(j) for j in range(kblock)] * 2
+          + [pos_spec(j) for j in range(kblock)],
         out_specs=pl.BlockSpec((1, 1, c, n_rep, hd),
                                lambda i, j, p, bt: (i, j, 0, 0, 0)),
         scratch_shapes=[
@@ -122,10 +189,10 @@ def paged_decode_attention(q, k_pages, v_pages, pos_pages, block_table,
     )
     out = pl.pallas_call(
         functools.partial(_paged_kernel, scale=scale, causal=causal,
-                          window=window, n_pages=n_pages),
+                          window=window, n_blocks=n_blocks, kblock=kblock),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, kvh, c, n_rep, hd), q.dtype),
         interpret=interpret,
-    )(block_table.astype(jnp.int32), q_pos.astype(jnp.int32),
-      qr, k_pages, v_pages, pos_pages)
+    )(bt, q_pos.astype(jnp.int32), qr,
+      *([k_pages] * kblock), *([v_pages] * kblock), *([pos_pages] * kblock))
     return out.transpose(0, 2, 1, 3, 4).reshape(b, c, h, hd)

@@ -18,12 +18,18 @@ _INTERPRET = jax.default_backend() != "tpu"
 
 def paged_attention(q, k_pages, v_pages, pos_pages, block_table, q_pos, *,
                     scale: float, causal: bool = True,
-                    window: Optional[int] = None, use_kernel: bool = False):
-    """q: (B, C, H, hd) -> (B, C, H, hd); see ``ref.paged_attention``."""
+                    window: Optional[int] = None, use_kernel: bool = False,
+                    kblock_pages: int = 1):
+    """q: (B, C, H, hd) -> (B, C, H, hd); see ``ref.paged_attention``.
+
+    ``kblock_pages`` only shapes the kernel's grid (block-table entries
+    spanned per invocation); the reference is layout-free and ignores it.
+    """
     if use_kernel:
         return kernel.paged_decode_attention(
             q, k_pages, v_pages, pos_pages, block_table, q_pos, scale=scale,
-            causal=causal, window=window, interpret=_INTERPRET)
+            causal=causal, window=window, kblock_pages=kblock_pages,
+            interpret=_INTERPRET)
     return ref.paged_attention(q, k_pages, v_pages, pos_pages, block_table,
                                q_pos, scale=scale, causal=causal,
                                window=window)

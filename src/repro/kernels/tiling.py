@@ -1,0 +1,94 @@
+"""Shared VMEM-budget tile arithmetic for the Pallas kernels.
+
+Every kernel in ``repro.kernels`` tiles against the same per-core VMEM
+budget (a conservative v5e figure — the compiler keeps a slice for
+spills/semaphores, so we never claim the full 16 MiB).  Centralising the
+arithmetic keeps two properties in one place:
+
+  * tile pickers (``pick_tiles``, ``pick_hidden_tile``) shrink the
+    streamed axis until the kernel's resident claim fits, last dims
+    128-aligned where the shape allows;
+  * config-time validators (``validate_kblock``) fail fast with an
+    actionable message when a knob combination could never lower — the
+    error names the knob to turn, not just the number that overflowed.
+"""
+from __future__ import annotations
+
+# Conservative per-core VMEM budget the kernels tile against (v5e has
+# 16 MiB; leave headroom for the compiler's own buffers).
+VMEM_BUDGET = 12 * 2**20
+
+
+def pick_tiles(d: int, hidden: int, itemsize: int,
+               vmem_budget: int = VMEM_BUDGET) -> tuple[int, int]:
+    """(BL, BH) tiles for the fused demux MLP: keep h + W1h + W1p + W2 +
+    f32 acc under budget, last dims 128-aligned where possible."""
+    bh = min(hidden, 512)
+    while bh > 128 and bh % 128 != 0:
+        bh //= 2
+    bl = min(512, max(8, vmem_budget // max(d * itemsize, 1) // 4))
+    bl = 1 << (bl.bit_length() - 1)
+    while bl > 8 and (bl * d * itemsize + 3 * d * bh * itemsize +
+                      bl * d * 4) > vmem_budget:
+        bl //= 2
+    return bl, bh
+
+
+def pick_hidden_tile(d: int, hidden: int, rows: int, itemsize: int,
+                     vmem_budget: int = VMEM_BUDGET) -> int:
+    """BH for the decode demux epilogue: ``rows`` (= N·C) output rows stay
+    resident in f32 while the hidden axis streams in BH tiles.  Resident
+    claim per step: rows·d f32 acc + rows·BH f32 activations + the three
+    weight tiles (2·d·BH + BH·d) + the (C + N)·d inputs (folded into
+    ``rows``·d as an upper bound)."""
+    bh = min(hidden, 512)
+    while bh > 128 and bh % 128 != 0:
+        bh //= 2
+    fixed = 2 * rows * d * 4                       # acc + input upper bound
+    while bh > 8 and (fixed + rows * bh * 4 +
+                      3 * d * bh * itemsize) > vmem_budget:
+        bh //= 2
+    return bh
+
+
+def kblock_vmem_bytes(kblock_pages: int, page_size: int, head_dim: int,
+                      itemsize: int = 2) -> int:
+    """Resident K-block claim of the paged decode kernel: K + V tiles of
+    ``kblock_pages`` pool pages plus their int32 position rows.  The query
+    block and f32 softmax scratch are O(C·n_rep·hd) — small and
+    knob-independent, so they ride in the budget headroom."""
+    rows = kblock_pages * page_size
+    return rows * head_dim * itemsize * 2 + rows * 4
+
+
+def max_kblock_pages(page_size: int, head_dim: int, itemsize: int = 2,
+                     vmem_budget: int = VMEM_BUDGET) -> int:
+    """Largest kblock_pages whose K-block claim fits the budget."""
+    k = 1
+    while kblock_vmem_bytes(2 * k, page_size, head_dim, itemsize) \
+            <= vmem_budget:
+        k *= 2
+    return k
+
+
+def validate_kblock(kblock_pages: int, page_size: int, head_dim: int, *,
+                    itemsize: int = 2,
+                    vmem_budget: int = VMEM_BUDGET) -> None:
+    """Fail fast on a K-block that could never fit VMEM.
+
+    Called at config time (``ModelConfig.__post_init__`` when the paged
+    Pallas kernel is enabled) and by the kernel wrapper, so an oversized
+    ``kblock_pages × page_size × head_dim`` claim raises here with the
+    knob to turn instead of dying inside Mosaic lowering.
+    """
+    if kblock_pages < 1:
+        raise ValueError(f"kblock_pages must be >= 1, got {kblock_pages}")
+    claim = kblock_vmem_bytes(kblock_pages, page_size, head_dim, itemsize)
+    if claim > vmem_budget:
+        fit = max_kblock_pages(page_size, head_dim, itemsize, vmem_budget)
+        raise ValueError(
+            f"paged decode K-block of kblock_pages={kblock_pages} x "
+            f"page_size={page_size} x head_dim={head_dim} claims "
+            f"{claim / 2**20:.1f} MiB of VMEM (budget "
+            f"{vmem_budget / 2**20:.1f} MiB); lower kblock_pages to "
+            f"<= {fit} or shrink page_size")

@@ -117,6 +117,9 @@ def _run_workload(args, cfg, mesh, mi, jax, Backbone, Engine):
           f"over {lanes} lanes ({args.batch} slots x {n})"
           + (f", paged (page_size={cfg.serving.page_size})"
              if cfg.serving.paged else "")
+          + (f", kernel (kblock_pages={cfg.serving.kblock_pages})"
+             if cfg.serving.use_kernel else "")
+          + (", fuse_demux" if cfg.serving.fuse_demux else "")
           + (f", prefill_chunk={cfg.serving.prefill_chunk}"
              if cfg.serving.prefill_chunk > 1 else "")
           + (f", policy={cfg.serving.policy}" if cfg.serving.policy != "fifo"
@@ -231,6 +234,17 @@ def main(argv=None):
     ap.add_argument("--prefill-chunk", type=int, default=1,
                     help="prompt tokens fed per decode step while a lane "
                          "ramps (1 = classic one-token ramp)")
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="route paged decode attention through the Pallas "
+                         "kernel (interpret mode off-TPU) instead of the "
+                         "jnp gather reference")
+    ap.add_argument("--kblock-pages", type=int, default=1,
+                    help="block-table entries the paged kernel spans per "
+                         "grid step (MXU-shaped multi-page K tiles; "
+                         "1 = page-at-a-time)")
+    ap.add_argument("--fuse-demux", action="store_true",
+                    help="fuse the index-embed demux projection into the "
+                         "decode epilogue (all N lanes demuxed in VMEM)")
     # policy-driven serving core (serving/policies.py)
     ap.add_argument("--policy", default="fifo",
                     help="admission policy: fifo | priority | slo (or any "
@@ -287,12 +301,16 @@ def main(argv=None):
     getter = get_smoke_config if args.smoke else get_config
     cfg = getter(args.arch, mux_n=args.mux_n)
     if (args.paged or args.prefill_chunk > 1 or args.policy != "fifo"
-            or args.preempt or args.replicas > 1):
+            or args.preempt or args.replicas > 1 or args.use_kernel
+            or args.kblock_pages > 1 or args.fuse_demux):
         import dataclasses
         from repro.configs.base import ServingConfig
         cfg = dataclasses.replace(cfg, serving=ServingConfig(
             paged=args.paged, page_size=args.page_size,
             pool_pages=args.pool_pages,
+            use_kernel=args.use_kernel,
+            kblock_pages=args.kblock_pages,
+            fuse_demux=args.fuse_demux,
             prefill_chunk=args.prefill_chunk,
             policy=args.policy, preempt=args.preempt,
             replicas=args.replicas, router_policy=args.router_policy,

@@ -150,6 +150,22 @@ def _layer_apply(p, x, cfg: ModelConfig, kind: dict, *, positions,
     return x, new_cache, aux
 
 
+def _demux_decode(params, h, cfg: ModelConfig, index_embeds):
+    """Decode-step demux of the (B, C, d) final hidden block -> (B, N, C, d).
+
+    ``serving.fuse_demux`` routes strategies with a fused decode epilogue
+    (index_embed: all N lanes demuxed in VMEM, the shared h·W1h computed
+    once per slot) through ``decode_apply``; everything else — and the
+    default — takes the ordinary strategy ``apply``, bit-for-bit today's
+    path."""
+    mux = cfg.mux
+    demux_s = get_demux(mux.demux)
+    if cfg.serving.fuse_demux and demux_s.fused_decode:
+        return demux_s.decode_apply(params["demux"], h, mux,
+                                    index_embeds=index_embeds)
+    return demux_s.apply(params["demux"], h, mux, index_embeds=index_embeds)
+
+
 # ---------------------------------------------------------------------------
 # Backbone
 # ---------------------------------------------------------------------------
@@ -523,8 +539,7 @@ class Backbone:
             mesh=mesh, mesh_info=mesh_info)
 
         if mux.active:
-            demuxed = get_demux(mux.demux).apply(
-                params["demux"], h, mux, index_embeds=index_embeds)
+            demuxed = _demux_decode(params, h, cfg, index_embeds)
             logits = Backbone.logits(params, demuxed[:, :, 0], cfg)  # (B,N,V)
             if lane_mask is not None:
                 logits = jnp.where(lane_mask[:, :, None].astype(bool),
@@ -564,8 +579,7 @@ class Backbone:
             chunk_lens=chunk_lens, mesh=mesh, mesh_info=mesh_info)
 
         if mux.active:
-            demuxed = get_demux(mux.demux).apply(
-                params["demux"], h, mux, index_embeds=index_embeds)
+            demuxed = _demux_decode(params, h, cfg, index_embeds)
             logits = Backbone.logits(params, demuxed, cfg)     # (B,N,C,V)
             if lane_mask is not None:
                 logits = jnp.where(lane_mask[..., None].astype(bool),

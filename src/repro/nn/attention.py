@@ -35,6 +35,9 @@ class AttnConfig:
     window: Optional[int] = None  # sliding-window size; None = full attention
     use_flash: bool = False  # route prefill through the Pallas flash kernel
     paged_kernel: bool = False  # paged decode: Pallas gather kernel vs jnp ref
+    kblock_pages: int = 1    # block-table entries the paged kernel spans per
+                             # grid step (MXU-shaped multi-page K tiles);
+                             # 1 = page-at-a-time, ignored by the jnp ref
     softmax_scale: Optional[float] = None
 
     @property
@@ -372,7 +375,7 @@ class Attention:
             out = paged_ops.paged_attention(
                 q, k_pages, v_pages, pos_pages, block_table, pos_q,
                 scale=cfg.scale, causal=cfg.causal, window=cfg.window,
-                use_kernel=cfg.paged_kernel)
+                use_kernel=cfg.paged_kernel, kblock_pages=cfg.kblock_pages)
         else:
             slots = cache["k"].shape[1]
             ci = jnp.asarray(cache_index, jnp.int32)
@@ -450,7 +453,7 @@ class Attention:
             out = paged_ops.paged_attention(
                 q, k_pages, v_pages, pos_pages, block_table, pos_q,
                 scale=cfg.scale, causal=cfg.causal, window=cfg.window,
-                use_kernel=cfg.paged_kernel)
+                use_kernel=cfg.paged_kernel, kblock_pages=cfg.kblock_pages)
             return out, new_cache
 
         slots = cache["k"].shape[1]

@@ -4,6 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.kernels import tiling
 from repro.kernels.attention import kernel as att_kernel, ref as att_ref
 from repro.kernels.demux import kernel as demux_kernel, ref as demux_ref
 from repro.kernels.multiplex import kernel as mux_kernel, ref as mux_ref
@@ -62,6 +63,50 @@ def test_demux_kernel_allclose(key, b, n, l, d, hidden, dtype):
     assert got.shape == (b, n, l, d)
     np.testing.assert_allclose(got.astype(np.float32),
                                want.astype(np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,n,c,d,hidden", [
+    (1, 2, 1, 64, 128),     # plain decode (C == 1), exact tiles
+    (2, 3, 2, 96, 160),     # chunked decode, ragged d/hidden
+    (1, 8, 4, 128, 640),    # multi H-block accumulation
+])
+def test_decode_demux_kernel_allclose(key, b, n, c, d, hidden, dtype):
+    """Fused decode epilogue == the generic demux kernel == the jnp ref on
+    a (B, C, d) decode hidden block."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    mlp = SharedMLPStack.init(k1, [2 * d, hidden, d])
+    mlp = jax.tree.map(lambda a: a.astype(dtype), mlp)
+    h = jax.random.normal(k2, (b, c, d)).astype(dtype)
+    p = jax.random.normal(k3, (b, n, d)).astype(dtype)
+    got = demux_kernel.decode_demux(mlp, h, p, interpret=True)
+    want = demux_ref.index_embed_demux(mlp, h, p)
+    assert got.shape == (b, n, c, d) and got.dtype == want.dtype
+    np.testing.assert_allclose(got.astype(np.float32),
+                               want.astype(np.float32), **_tol(dtype))
+    generic = demux_kernel.index_embed_demux(mlp, h, p, interpret=True)
+    np.testing.assert_allclose(got.astype(np.float32),
+                               generic.astype(np.float32), **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# K-block tiling arithmetic (kernels/tiling.py)
+# ---------------------------------------------------------------------------
+
+def test_kblock_vmem_validation():
+    ok = tiling.max_kblock_pages(16, 64)
+    assert ok >= 1
+    tiling.validate_kblock(ok, 16, 64)              # at the edge: fine
+    with pytest.raises(ValueError, match="lower kblock_pages to <="):
+        tiling.validate_kblock(2 * ok, 16, 64)
+    with pytest.raises(ValueError, match=">= 1"):
+        tiling.validate_kblock(0, 16, 64)
+
+
+def test_kblock_vmem_bytes_monotonic():
+    b1 = tiling.kblock_vmem_bytes(1, 8, 64)
+    b4 = tiling.kblock_vmem_bytes(4, 8, 64)
+    assert b4 == 4 * b1 > 0
 
 
 # ---------------------------------------------------------------------------
@@ -133,8 +178,10 @@ def _paged_case(key, b, h, kvh, hd, pool, ps, mp, c, *, dtype, seed=0):
     return q, k_pages, v_pages, jnp.asarray(pos), jnp.asarray(bt), q_pos
 
 
-# (b, h, kvh, hd, pool, ps, mp, c): page_size 4..16, n_rep 1..4, chunk 1..4,
-# pool sizes prime/odd so page ids never line up with slot strides.
+# (b, h, kvh, hd, pool, ps, mp, c): page_size 2..16, n_rep 1..4, chunk 1..4,
+# pool sizes prime/odd so page ids never line up with slot strides, and
+# max_pages deliberately non-multiples of the K-block widths below so the
+# kernel's -1 right-padding is always exercised.
 PAGED_SWEEP = [
     (2, 4, 2, 64, 9, 8, 4, 1),      # GQA 2x, multi-page, plain decode
     (1, 4, 4, 32, 5, 4, 3, 1),      # MHA, small pages, odd pool
@@ -146,20 +193,58 @@ PAGED_SWEEP = [
 ]
 
 
+def _rows_with_valid_keys(args, *, causal, window):
+    """(B, C) bool: query rows with at least one attendable key.  Rows with
+    none are garbage in every implementation (the ref averages stale pool
+    values, the kernel's skipped K-blocks leave 0/eps) and callers mask
+    them — so the sweep compares only live rows."""
+    _q, _k, _v, pos_pages, bt, q_pos = args
+    k_pos = np.asarray(paged_ref.gather_positions(pos_pages, bt))
+    diff = np.asarray(q_pos)[:, :, None] - k_pos[:, None, :]
+    ok = (k_pos >= 0)[:, None, :]
+    if causal:
+        ok = ok & (diff >= 0)
+    if window is not None:
+        ok = ok & (diff < window)
+    return ok.any(-1)
+
+
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("b,h,kvh,hd,pool,ps,mp,c", PAGED_SWEEP)
-@pytest.mark.parametrize("window", [None, 8])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 8),
+                                           (False, 8)])
+@pytest.mark.parametrize("kblock", [1, 2, 4])
 def test_paged_kernel_sweep(key, b, h, kvh, hd, pool, ps, mp, c, dtype,
-                            window):
+                            causal, window, kblock):
     args = _paged_case(key, b, h, kvh, hd, pool, ps, mp, c, dtype=dtype)
     scale = hd ** -0.5
-    want = paged_ref.paged_attention(*args, scale=scale, causal=True,
+    want = paged_ref.paged_attention(*args, scale=scale, causal=causal,
                                      window=window)
-    got = paged_kernel.paged_decode_attention(*args, scale=scale, causal=True,
-                                              window=window, interpret=True)
+    got = paged_kernel.paged_decode_attention(*args, scale=scale,
+                                              causal=causal, window=window,
+                                              kblock_pages=kblock,
+                                              interpret=True)
     assert got.shape == want.shape and got.dtype == want.dtype
-    np.testing.assert_allclose(got.astype(np.float32),
-                               want.astype(np.float32), **_tol(dtype))
+    live = _rows_with_valid_keys(args, causal=causal, window=window)
+    live = live[:, :, None, None]
+    np.testing.assert_allclose(np.where(live, got.astype(np.float32), 0.0),
+                               np.where(live, want.astype(np.float32), 0.0),
+                               **_tol(dtype))
+
+
+def test_paged_kernel_kblock_widths_agree(key):
+    """All K-block widths are the same function: the kblock_pages grid knob
+    must not move the numbers (same online softmax, f32 tolerance)."""
+    args = _paged_case(key, 2, 4, 2, 32, 11, 4, 6, 2, dtype=jnp.float32)
+    outs = [paged_kernel.paged_decode_attention(
+        *args, scale=32 ** -0.5, causal=True, kblock_pages=kb,
+        interpret=True) for kb in (1, 2, 4)]
+    live = _rows_with_valid_keys(args, causal=True, window=None)
+    live = live[:, :, None, None]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.where(live, o, 0.0),
+                                   np.where(live, outs[0], 0.0),
+                                   rtol=2e-5, atol=2e-5)
 
 
 def test_paged_ref_matches_contiguous_attention(key):

@@ -233,3 +233,75 @@ def test_paged_kernel_end_to_end(key):
     out_ref = {q.rid: q.output for q in s_ref.finished}
     out_ker = {q.rid: q.output for q in s_ker.finished}
     assert out_ref == out_ker
+
+
+# ---------------------------------------------------------------------------
+# K-block grid + fused demux epilogue (MXU-shaped decode)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kblock", [2, 4])
+def test_paged_kernel_kblock_end_to_end(key, kblock):
+    """kblock_pages > 1 spans several block-table entries per kernel
+    invocation; the served token stream must match the jnp-ref paged run
+    exactly — the grid shape is not allowed to move the tokens."""
+    cfg_ref = _cfg(paged=True, page_size=4)
+    cfg_ker = _cfg(paged=True, page_size=4, use_kernel=True,
+                   kblock_pages=kblock)
+    params = Backbone.init(key, cfg_ref)
+    base = _requests([(2, 0), (4, 0), (2, 1), (3, 2)])
+
+    s_ref = ContinuousScheduler(Engine(params, cfg_ref, batch=2, max_len=22))
+    s_ref.run(_fresh(base))
+    s_ker = ContinuousScheduler(Engine(params, cfg_ker, batch=2, max_len=22))
+    s_ker.run(_fresh(base))
+    assert {q.rid: q.output for q in s_ref.finished} == \
+           {q.rid: q.output for q in s_ker.finished}
+
+
+def test_fuse_demux_token_stream_bitwise_unchanged(key):
+    """ServingConfig.fuse_demux routes decode demux through the fused
+    epilogue kernel; the scheduler's token stream must be bitwise-unchanged
+    vs the plain contiguous run at the same prefill chunk (chunk width
+    changes lane co-residency and so legitimately changes the DataMUX
+    superposition — the baseline must share it)."""
+    cfg_c = _cfg()
+    params = Backbone.init(key, cfg_c)
+    base = _requests([(3, 0), (5, 0), (2, 1), (4, 2)])
+
+    for chunk in (1, 2):
+        s_c = ContinuousScheduler(
+            Engine(params, _cfg(prefill_chunk=chunk), batch=2, max_len=30))
+        s_c.run(_fresh(base))
+        want = {q.rid: q.output for q in s_c.finished}
+        cfg_f = _cfg(paged=True, page_size=4, prefill_chunk=chunk,
+                     use_kernel=True, kblock_pages=2, fuse_demux=True)
+        s_f = ContinuousScheduler(Engine(params, cfg_f, batch=2, max_len=30))
+        s_f.run(_fresh(base))
+        got = {q.rid: q.output for q in s_f.finished}
+        assert got == want, f"fuse_demux changed tokens at chunk={chunk}"
+
+
+def test_fuse_demux_contiguous_serving(key):
+    """fuse_demux is independent of paging: a contiguous engine with the
+    fused epilogue on still reproduces the baseline token stream."""
+    cfg_c = _cfg()
+    params = Backbone.init(key, cfg_c)
+    base = _requests([(3, 0), (2, 1), (4, 1)])
+    s_c = ContinuousScheduler(Engine(params, cfg_c, batch=2, max_len=24))
+    s_c.run(_fresh(base))
+    s_f = ContinuousScheduler(
+        Engine(params, _cfg(fuse_demux=True), batch=2, max_len=24))
+    s_f.run(_fresh(base))
+    assert {q.rid: q.output for q in s_c.finished} == \
+           {q.rid: q.output for q in s_f.finished}
+
+
+def test_kblock_config_validation_fails_fast():
+    """An over-budget kblock_pages x page_size x head_dim claim raises at
+    config construction with the knob to turn — not inside lowering."""
+    with pytest.raises(ValueError, match="kblock_pages must be >= 1"):
+        ServingConfig(kblock_pages=0)
+    with pytest.raises(ValueError, match="lower kblock_pages to <="):
+        _cfg(paged=True, page_size=16, use_kernel=True, kblock_pages=1 << 16)
+    # kernel off -> the knob is inert, any value constructs
+    _cfg(paged=True, page_size=16, kblock_pages=1 << 16)

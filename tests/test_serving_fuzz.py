@@ -10,7 +10,10 @@ interleaving of arrivals, ramps, chunk widths, priorities, and retirements:
     completes with exactly its generation budget;
   * no page leaks after drain: only the resident prefix pages stay mapped;
   * paged and contiguous engines emit identical tokens on the same trace
-    at the same prefill chunk;
+    at the same prefill chunk — with the paged side running the Pallas
+    decode kernel at fuzzed K-block widths (``kblock_pages``) and the
+    fused demux epilogue (``fuse_demux``), so the MXU-shaped kernel path
+    is pinned to the jnp decode path token-for-token;
   * preempt-and-swap (ISSUE 5): under random two-class traces with
     ``policy="slo"`` + ``preempt=True``, page conservation extends over the
     swap ledger's parked rows, no preempted request loses tokens, the
@@ -103,8 +106,9 @@ def _drive(sched, trace, *, max_steps=3000):
 
 @settings(max_examples=6, deadline=None, derandomize=True)
 @given(seed=st.integers(0, 10_000), chunk=st.integers(1, 4),
-       page_size=st.integers(2, 8), policy=st.integers(0, 1))
-def test_fuzz_trace_invariants(seed, chunk, page_size, policy):
+       page_size=st.integers(2, 8), policy=st.integers(0, 1),
+       kblock=st.integers(0, 2))
+def test_fuzz_trace_invariants(seed, chunk, page_size, policy, kblock):
     rng = np.random.default_rng(seed)
     trace = _trace(rng, n_req=int(rng.integers(4, 9)), max_lp=6, max_gen=6)
     policy = ("fifo", "priority")[policy]
@@ -113,8 +117,14 @@ def test_fuzz_trace_invariants(seed, chunk, page_size, policy):
     max_len = CFG.mux.prefix_len + 4 * (6 + 6)
 
     def build(paged):
+        # The paged side runs the Pallas decode kernel with a fuzzed
+        # K-block width and the fused demux epilogue on — paged ==
+        # contiguous below therefore also pins the MXU-shaped kernel path
+        # to the jnp decode path token-for-token (float32 backbone).
         serving = ServingConfig(paged=paged, page_size=page_size,
-                                prefill_chunk=chunk)
+                                prefill_chunk=chunk, use_kernel=paged,
+                                kblock_pages=2 ** kblock if paged else 1,
+                                fuse_demux=paged)
         cfg = dataclasses.replace(CFG, serving=serving)
         eng = Engine(PARAMS, cfg, batch=N_SLOTS, max_len=max_len)
         return ContinuousScheduler(eng, policy=policy)
