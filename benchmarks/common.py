@@ -101,6 +101,15 @@ def train_and_eval(key, cfg, task_name: str, *, steps=None, lr=None,
     return rec, state
 
 
+def telemetry_summary(tracer) -> dict:
+    """Trace-derived summary a serving bench attaches to its payload: event
+    counts, TTFT histogram, page-pool high-water timeline.  Everything in it
+    is count/step-based (no wall-clock), so the record stays reproducible
+    for ``benchmarks.run --check``."""
+    from repro.serving.telemetry import trace_summary
+    return trace_summary(tracer)
+
+
 def save(name: str, payload):
     os.makedirs(RESULTS_DIR, exist_ok=True)
     path = os.path.join(RESULTS_DIR, f"{name}.json")

@@ -38,6 +38,9 @@ from repro.models import Backbone
 from repro.serving.engine import Engine
 from repro.serving.paging import pages_for
 from repro.serving.scheduler import ContinuousScheduler, poisson_trace
+# Grid-geometry math lives with the rest of the observability layer now;
+# the scheduler's per-step kernel counters use the same function.
+from repro.serving.telemetry import kblock_stats as _kblock_stats
 
 DRYRUN_DIR = os.environ.get("REPRO_DRYRUN", "results/dryrun")
 
@@ -49,22 +52,6 @@ CFG = ModelConfig(
     n_heads=2, n_kv_heads=2, d_ff=128, vocab=128, dtype="float32",
     param_dtype="float32", remat="none",
     mux=MuxConfig(n=2, strategy="hadamard", demux="index_embed"))
-
-
-def _kblock_stats(bt: np.ndarray, kblock: int, kvh: int):
-    """Grid geometry for one kernel launch over block table ``bt``
-    (B, max_pages): (grid steps, compute-skipped all-unmapped K-blocks,
-    pool-mapped K-block rows).  Matches the kernel's padding: the table is
-    right-padded with -1 to a multiple of ``kblock``."""
-    b, mp = bt.shape
-    pad = -mp % kblock
-    if pad:
-        bt = np.concatenate([bt, np.full((b, pad), -1, bt.dtype)], axis=1)
-    blocks = bt.reshape(b, -1, kblock)
-    grid = b * blocks.shape[1] * kvh
-    skipped = int((blocks < 0).all(axis=2).sum()) * kvh
-    mapped_rows = int((blocks >= 0).sum()) * kvh
-    return grid, skipped, mapped_rows
 
 
 class _GridProbe(ContinuousScheduler):

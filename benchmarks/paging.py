@@ -42,6 +42,7 @@ from repro.serving.kvcache import cache_bytes, paged_cache_bytes
 from repro.serving.paging import pages_for
 from repro.serving.scheduler import (ContinuousScheduler, Request,
                                      poisson_trace)
+from repro.serving.telemetry import Tracer
 
 
 def _fresh(reqs):
@@ -225,12 +226,12 @@ def run_preempt(*, n=4, batch=2, n_batch=8, n_latency=4, rate=2.0,
         prompt_len=prompt_len, batch_gen=batch_gen, latency_gen=latency_gen,
         vocab=cfg.vocab, seed=seed)
 
-    def build(paged, preempt):
+    def build(paged, preempt, tracer=None):
         serving = ServingConfig(paged=paged, page_size=page_size,
                                 policy="slo", preempt=preempt)
         eng = Engine(params, dataclasses.replace(cfg, serving=serving),
                      batch=batch, max_len=max_total)
-        return ContinuousScheduler(eng)
+        return ContinuousScheduler(eng, tracer=tracer)
 
     payload = {"config": {"n": n, "batch": batch, "n_batch": n_batch,
                           "n_latency": n_latency, "rate": rate,
@@ -243,7 +244,10 @@ def run_preempt(*, n=4, batch=2, n_batch=8, n_latency=4, rate=2.0,
         t0 = time.time()
         stats_b = base.run(_fresh(trace))
         dt_b = time.time() - t0
-        pre = build(paged, preempt=True)
+        # Trace the paged preempt run: its summary carries the page-pool
+        # high-water timeline alongside the TTFT histogram.
+        tracer = Tracer() if paged else None
+        pre = build(paged, preempt=True, tracer=tracer)
         t0 = time.time()
         stats_p = pre.run(_fresh(trace))
         dt_p = time.time() - t0
@@ -299,6 +303,9 @@ def run_preempt(*, n=4, batch=2, n_batch=8, n_latency=4, rate=2.0,
             },
             "victim_bitwise_identical": bitwise,
         }
+        if tracer is not None:
+            payload[mode]["preempt"]["telemetry"] = \
+                common.telemetry_summary(tracer)
         print(f"  {mode:>10}: latency TTFT mean {base_lat['mean']} -> "
               f"{pre_lat['mean']} steps ({stats_p.preemptions} preemptions, "
               f"{stats_p.resumes} resumes), victims bitwise-identical: "

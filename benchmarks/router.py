@@ -29,6 +29,7 @@ from repro.models import Backbone
 from repro.serving.engine import Engine
 from repro.serving.router import ReplicaRouter
 from repro.serving.scheduler import ContinuousScheduler, poisson_trace
+from repro.serving.telemetry import Tracer
 
 
 def _fresh(reqs):
@@ -75,9 +76,12 @@ def run(*, n=4, batch=2, num_requests=64, rate=8.0, prompt_len=3,
     }
     tok_per_step = {}
     for r in (1, 2, 4):
+        # Trace the R=2 run (the one the scaling assertion rides on); the
+        # summary is count-based, so the record stays `--check`-stable.
+        tracer = Tracer() if r == 2 else None
         router = ReplicaRouter.build(params, cfg, batch=batch,
                                      max_len=max_total, replicas=r,
-                                     policy=policy)
+                                     policy=policy, tracer=tracer)
         t0 = time.time()
         stats = router.run(_fresh(trace))
         dt = time.time() - t0
@@ -98,6 +102,9 @@ def run(*, n=4, batch=2, num_requests=64, rate=8.0, prompt_len=3,
                                 / max(1, p["load"]["total_lanes"]), 2)
                           for p in stats.per_replica],
         }
+        if tracer is not None:
+            payload["replicas"][f"r{r}"]["telemetry"] = \
+                common.telemetry_summary(tracer)
         print(f"  R={r}: {stats.router_steps} router steps, "
               f"{stats.generated_tokens} tokens "
               f"({payload['replicas'][f'r{r}']['tok_per_step']} tok/step, "

@@ -3,16 +3,28 @@
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run fig3 fig4b # subset
     REPRO_BENCH_FAST=1 ... python -m benchmarks.run    # CI smoke
+    PYTHONPATH=src python -m benchmarks.run --check router
+
+``--check`` re-runs the named suites into a temporary directory and compares
+the deterministic keys of the fresh records — step/token counts exactly,
+``tok_per_step`` within ``--tol`` relative tolerance — against the committed
+``results/bench/*.json``, exiting non-zero with a per-key report instead of
+silently overwriting the records.  Wall-clock keys (``tok_per_s``,
+``tok_per_s_wall``, ``train_time_s``) are never compared.
 
 Dry-run/roofline records are produced separately by
 ``python -m repro.launch.dryrun --all`` (own process: 512 fake devices).
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import sys
+import tempfile
 import time
 
-from benchmarks import (decode_kernel, heads_ablation, image_mux,
+from benchmarks import (common, decode_kernel, heads_ablation, image_mux,
                         index_variance, memory_overhead, mux_strategies,
                         paging, retrieval_acc, roofline, router,
                         small_models, task_acc_vs_n, throughput_vs_n)
@@ -35,13 +47,116 @@ SUITES = {
     "decode_kernel": decode_kernel.run,  # K-block grid + fused demux
 }
 
+# Keys ``--check`` compares.  Only scheduler-determined counts qualify: the
+# serving stack is deterministic given a trace, so these reproduce on any
+# platform.  Wall-clock rates and trained-model metrics do not.
+CHECK_EXACT = ("decode_steps", "generated_tokens", "router_steps",
+               "finished", "preemptions", "resumes", "requeues",
+               "peak_pool_pages")
+CHECK_TOL = ("tok_per_step",)
 
-def main(argv):
-    names = argv or list(SUITES)
-    t0 = time.time()
+
+def _tracked(record, path=""):
+    """Flatten ``record`` to {dotted.path: value} over the tracked keys."""
+    out = {}
+    if isinstance(record, dict):
+        for k, v in record.items():
+            p = f"{path}.{k}" if path else str(k)
+            if isinstance(v, (dict, list)):
+                out.update(_tracked(v, p))
+            elif k in CHECK_EXACT or k in CHECK_TOL:
+                out[p] = (k, v)
+    elif isinstance(record, list):
+        for i, v in enumerate(record):
+            out.update(_tracked(v, f"{path}[{i}]"))
+    return out
+
+
+def _compare(name: str, committed: dict, fresh: dict, tol: float) -> list:
+    """Per-key mismatch report between two records of suite ``name``."""
+    want, got = _tracked(committed), _tracked(fresh)
+    bad = []
+    for p in sorted(set(want) | set(got)):
+        if p not in got:
+            bad.append(f"{name}: {p} missing from the fresh run "
+                       f"(committed {want[p][1]!r})")
+        elif p not in want:
+            bad.append(f"{name}: {p} = {got[p][1]!r} has no committed value "
+                       f"(stale record? re-run without --check)")
+        else:
+            key, w = want[p]
+            g = got[p][1]
+            if key in CHECK_TOL:
+                if abs(g - w) > tol * max(abs(w), 1e-9):
+                    bad.append(f"{name}: {p} = {g} vs committed {w} "
+                               f"(rel tol {tol})")
+            elif g != w:
+                bad.append(f"{name}: {p} = {g!r} vs committed {w!r}")
+    return bad
+
+
+def check(names: list, tol: float) -> None:
+    """Re-run ``names`` into a temp dir and diff against committed records."""
+    committed_dir = common.RESULTS_DIR
+    with tempfile.TemporaryDirectory(prefix="bench-check-") as tmp:
+        saved = (common.RESULTS_DIR, decode_kernel.DRYRUN_DIR)
+        common.RESULTS_DIR = os.path.join(tmp, "bench")
+        decode_kernel.DRYRUN_DIR = os.path.join(tmp, "dryrun")
+        try:
+            for name in names:
+                SUITES[name]()
+            fresh_dir = common.RESULTS_DIR
+            mismatches = []
+            for fn in sorted(os.listdir(fresh_dir)):
+                if not fn.endswith(".json"):
+                    continue
+                ref_path = os.path.join(committed_dir, fn)
+                if not os.path.exists(ref_path):
+                    mismatches.append(
+                        f"{fn}: no committed record at {ref_path} "
+                        f"(run without --check to create it)")
+                    continue
+                with open(ref_path) as f:
+                    committed = json.load(f)
+                with open(os.path.join(fresh_dir, fn)) as f:
+                    fresh = json.load(f)
+                mismatches += _compare(fn, committed, fresh, tol)
+        finally:
+            common.RESULTS_DIR, decode_kernel.DRYRUN_DIR = saved
+    if mismatches:
+        print(f"\n[benchmarks.run --check] FAILED "
+              f"({len(mismatches)} mismatches):", file=sys.stderr)
+        for m in mismatches:
+            print(f"  {m}", file=sys.stderr)
+        raise SystemExit(1)
+    print(f"\n[benchmarks.run --check] OK: {', '.join(names)} match the "
+          f"committed records")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        prog="benchmarks.run",
+        description="Run paper-figure benchmark suites.")
+    ap.add_argument("suites", nargs="*", metavar="SUITE",
+                    help=f"subset to run (default: all). "
+                         f"Known: {', '.join(SUITES)}")
+    ap.add_argument("--check", action="store_true",
+                    help="re-run into a temp dir and compare deterministic "
+                         "keys against committed results/bench/*.json "
+                         "instead of overwriting them")
+    ap.add_argument("--tol", type=float, default=0.02,
+                    help="relative tolerance for tok_per_step under "
+                         "--check (default 0.02)")
+    args = ap.parse_args(argv)
+    names = args.suites or list(SUITES)
     for name in names:
         if name not in SUITES:
             raise SystemExit(f"unknown suite {name!r}; have {list(SUITES)}")
+    t0 = time.time()
+    if args.check:
+        check(names, args.tol)
+        return
+    for name in names:
         SUITES[name]()
     print(f"\n[benchmarks.run] done ({time.time() - t0:.0f}s): "
           f"{', '.join(names)}")

@@ -47,6 +47,28 @@ import os
 import time
 
 
+def _make_tracer(args):
+    """A live ``Tracer`` when any telemetry sink is requested, else None —
+    the scheduler/router then run with the NULL_TRACER default (the
+    zero-overhead untraced path)."""
+    if not (args.trace or args.metrics):
+        return None
+    from repro.serving.telemetry import Tracer
+    return Tracer()
+
+
+def _export_telemetry(args, tracer) -> None:
+    if tracer is None:
+        return
+    if args.trace:
+        n = tracer.export_chrome(args.trace)
+        print(f"[serve] trace: {n} traceEvents -> {args.trace} "
+              f"(load at https://ui.perfetto.dev)")
+    if args.metrics:
+        n = tracer.metrics.write_jsonl(args.metrics)
+        print(f"[serve] metrics: {n} per-step snapshots -> {args.metrics}")
+
+
 def _fmt_ttft(v) -> str:
     """A TTFT percentile of -1 means no request produced a first token
     (empty trace, all-preempted run): print n/a, not a bogus latency."""
@@ -100,10 +122,11 @@ def _run_workload(args, cfg, mesh, mi, jax, Backbone, Engine):
     params = Backbone.init(key, cfg)
     n = max(cfg.mux.n, 1)
     max_total = args.prompt_len * 2 + args.gen * 4 + 1
+    tracer = _make_tracer(args)
     with mesh:
         eng = Engine(params, cfg, batch=args.batch, max_len=max_total,
                      mesh=mesh, mesh_info=mi)
-        sched = ContinuousScheduler(eng)
+        sched = ContinuousScheduler(eng, tracer=tracer)
         trace = poisson_trace(
             args.num_requests, rate=args.rate, prompt_len=args.prompt_len,
             gen_len=args.gen, vocab=cfg.vocab, max_total=max_total,
@@ -111,7 +134,6 @@ def _run_workload(args, cfg, mesh, mi, jax, Backbone, Engine):
         t0 = time.time()
         stats = sched.run(trace)
         dt = time.time() - t0
-    static = static_batch_steps(trace, args.batch, n)
     lanes = args.batch * n
     print(f"[serve] workload={args.workload}: {args.num_requests} requests "
           f"over {lanes} lanes ({args.batch} slots x {n})"
@@ -146,9 +168,16 @@ def _run_workload(args, cfg, mesh, mi, jax, Backbone, Engine):
         print(f"[serve] pool: peak {stats.peak_pages}/{load.usable_pages} "
               f"pages ({sched.allocator.page_bytes()} B/page), "
               f"{load.pages_in_use} in use after drain")
-    print(f"[serve] static baseline: {static} decode steps "
-          f"(continuous saves {100 * (1 - stats.decode_steps / static):.0f}%"
-          f" on this trace)" if static else "[serve] static baseline: n/a")
+    if args.baseline:
+        # Opt-in: the lock-step comparison is extra host work a plain serve
+        # shouldn't pay just for a print line.
+        static = static_batch_steps(trace, args.batch, n)
+        print(f"[serve] static baseline: {static} decode steps "
+              f"(continuous saves "
+              f"{100 * (1 - stats.decode_steps / static):.0f}%"
+              f" on this trace)" if static
+              else "[serve] static baseline: n/a")
+    _export_telemetry(args, tracer)
     if stats.finished != args.num_requests:
         raise SystemExit(
             f"[serve] FAIL: only {stats.finished}/{args.num_requests} "
@@ -164,10 +193,11 @@ def _run_router(args, cfg, mesh, mi, jax, Backbone, Engine):
     params = Backbone.init(key, cfg)
     n = max(cfg.mux.n, 1)
     max_total = args.prompt_len * 2 + args.gen * 4 + 1
+    tracer = _make_tracer(args)
     with mesh:
         router = ReplicaRouter.build(
             params, cfg, batch=args.batch, max_len=max_total,
-            replicas=args.replicas, mesh=mesh, mesh_info=mi)
+            replicas=args.replicas, tracer=tracer, mesh=mesh, mesh_info=mi)
         trace = poisson_trace(
             args.num_requests, rate=args.rate, prompt_len=args.prompt_len,
             gen_len=args.gen, vocab=cfg.vocab, max_total=max_total,
@@ -195,6 +225,7 @@ def _run_router(args, cfg, mesh, mi, jax, Backbone, Engine):
     if args.report:
         for line in _report_lines(stats):
             print(line)
+    _export_telemetry(args, tracer)
     if stats.finished != args.num_requests:
         raise SystemExit(
             f"[serve] FAIL: only {stats.finished}/{args.num_requests} "
@@ -269,6 +300,17 @@ def main(argv=None):
     ap.add_argument("--router-sync", action="store_true",
                     help="step every replica each router tick (lock-step) "
                          "instead of skipping idle replicas")
+    # telemetry (serving/telemetry.py)
+    ap.add_argument("--trace", default="", metavar="OUT.trace.json",
+                    help="record request-lifecycle spans + per-step "
+                         "timeline and write a Chrome/Perfetto traceEvents "
+                         "JSON (load at https://ui.perfetto.dev)")
+    ap.add_argument("--metrics", default="", metavar="OUT.jsonl",
+                    help="write one metrics snapshot per step as JSONL "
+                         "(counters + gauges, r{i}/- or router/-prefixed)")
+    ap.add_argument("--baseline", action="store_true",
+                    help="also compute and print the static lock-step "
+                         "baseline step count for the same trace")
     args = ap.parse_args(argv)
     workload = args.workload == "poisson"
     if args.batch is None:

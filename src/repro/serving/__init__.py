@@ -14,6 +14,9 @@ from repro.serving.scheduler import (ContinuousScheduler, Request,
                                      SchedulerLoad, SchedulerStats,
                                      poisson_trace, static_batch_steps)
 from repro.serving.slots import ParkedGroup, SlotTable, SwapLedger
+from repro.serving.telemetry import (NULL_TRACER, MetricsRegistry, NullTracer,
+                                     TraceEvent, Tracer, kblock_stats,
+                                     trace_summary)
 
 __all__ = [
     "Engine", "ServeState",
@@ -27,4 +30,6 @@ __all__ = [
     "ReplicaRouter", "RouterStats", "RoutingPolicy",
     "register_routing", "get_routing", "list_routing",
     "SlotTable", "ParkedGroup", "SwapLedger",
+    "Tracer", "NullTracer", "NULL_TRACER", "TraceEvent", "MetricsRegistry",
+    "kblock_stats", "trace_summary",
 ]

@@ -42,6 +42,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.nn.attention import paged_eligible
 from repro.serving.kvcache import _masked_restore
+from repro.serving.telemetry import NULL_TRACER
 
 # Cache pytree sections and the axis their *contiguous* leaves carry the
 # slot dimension on (paged pool leaves carry the pool on the same axis).
@@ -183,6 +184,8 @@ class PagedKVSlotAllocator:
         self.max_len = max_len
         ps = page_size or cfg.serving.page_size
         self.page_size = ps
+        # Telemetry recorder; rebound by ``ContinuousScheduler.set_tracer``.
+        self.tracer = NULL_TRACER
         self.pages_per_slot = pages_for(max_len, ps)
         dense = batch * self.pages_per_slot + 1  # + trash page
         self.pool_pages = pool_pages or cfg.serving.pool_pages or dense
@@ -493,6 +496,9 @@ class PagedKVSlotAllocator:
                 if self.table.rows[s, j] < 0:
                     fresh.append(self.table.allocate(s, j))
         if fresh:
+            if self.tracer.enabled:
+                self.tracer.event("page_alloc", count=len(fresh),
+                                  free_after=self.table.free_pages)
             # Pad to a multiple of B so the jitted invalidate sees a handful
             # of shapes at most (single-token decode always lands on B).
             pad_to = self.batch * (1 + (len(fresh) - 1) // self.batch)
@@ -506,8 +512,13 @@ class PagedKVSlotAllocator:
         contiguous state to the primed template.  Live slots are untouched
         bit-for-bit."""
         mask = np.asarray(slot_mask, bool)
+        n_freed = 0
         for s in np.nonzero(mask)[0]:
-            self.table.free_slot(int(s), keep=self.n_prefix_pages)
+            n_freed += len(self.table.free_slot(int(s),
+                                                keep=self.n_prefix_pages))
+        if n_freed and self.tracer.enabled:
+            self.tracer.event("page_free", count=n_freed,
+                              free_after=self.table.free_pages)
         self.cache = self._reset(self.cache, self.template,
                                  jnp.asarray(mask), self._partial_pages)
         self._device_table = None

@@ -56,6 +56,7 @@ import numpy as np
 from repro.serving.policies import SloClasses
 from repro.serving.scheduler import (ContinuousScheduler, Request,
                                      SchedulerLoad, SchedulerStats)
+from repro.serving.telemetry import ROUTER_SCOPE, Tracer, as_scope
 
 T = TypeVar("T", bound=type)
 
@@ -257,7 +258,7 @@ class ReplicaRouter:
     """
 
     def __init__(self, schedulers: Sequence[ContinuousScheduler], *,
-                 policy=None, sync: Optional[bool] = None):
+                 policy=None, sync: Optional[bool] = None, tracer=None):
         if not schedulers:
             raise ValueError("ReplicaRouter needs at least one replica")
         self.replicas: list[ContinuousScheduler] = list(schedulers)
@@ -272,11 +273,23 @@ class ReplicaRouter:
         self.stats = RouterStats(replicas=len(self.replicas),
                                  policy=self.policy.name, sync=self.sync,
                                  dispatched=[0] * len(self.replicas))
+        # Telemetry: the router records under its own scope; each replica
+        # scheduler gets scope i of the same Tracer.  Request spans open at
+        # the router ("submit") and replicas only add lifecycle detail
+        # (emit_submit off), and the router snaps the fleet-wide metric row
+        # once per tick (replica owns_snapshots off).
+        self.tracer = as_scope(tracer, ROUTER_SCOPE)
+        if isinstance(tracer, Tracer):
+            for i, sched in enumerate(self.replicas):
+                scope = tracer.scope(i)
+                scope.owns_snapshots = False
+                scope.emit_submit = False
+                sched.set_tracer(scope)
 
     @classmethod
     def build(cls, params, cfg, *, batch: int, max_len: int,
               replicas: Optional[int] = None, overrides: Optional[dict] = None,
-              policy=None, sync: Optional[bool] = None,
+              policy=None, sync: Optional[bool] = None, tracer=None,
               **engine_kwargs) -> "ReplicaRouter":
         """R replicas over one shared param set.  ``overrides`` maps a
         replica index to either a full ModelConfig or just a ServingConfig
@@ -294,7 +307,7 @@ class ReplicaRouter:
             scheds.append(ContinuousScheduler(
                 Engine(params, c, batch=batch, max_len=max_len,
                        **engine_kwargs)))
-        return cls(scheds, policy=policy, sync=sync)
+        return cls(scheds, policy=policy, sync=sync, tracer=tracer)
 
     # -- queue ----------------------------------------------------------------
 
@@ -305,10 +318,19 @@ class ReplicaRouter:
         for sched in self.replicas:
             reason = sched.accepts(req)
             if reason is None:
+                if self.tracer.enabled:
+                    self.tracer.event("submit", ts=max(self.t, req.arrival),
+                                      rid=req.rid,
+                                      prompt_len=len(req.prompt),
+                                      max_new_tokens=req.max_new_tokens,
+                                      slo=req.slo)
                 self.requests[req.rid] = req
                 self.queue.append(req)
                 return
             reasons.append(reason)
+        if self.tracer.enabled:
+            self.tracer.event("reject", ts=max(self.t, req.arrival),
+                              rid=req.rid, reason=reasons[0].split(";")[0])
         raise ValueError(
             f"request {req.rid} fits none of the {len(self.replicas)} "
             f"replicas: {reasons[0]}")
@@ -326,12 +348,17 @@ class ReplicaRouter:
             pick = self.policy.select(req, candidates)
             if pick is None:
                 self.stats.requeues += 1
+                if self.tracer.enabled:
+                    self.tracer.event("requeue", rid=req.rid,
+                                      candidates=len(candidates))
                 break
             if not 0 <= pick < len(self.replicas):
                 raise ValueError(
                     f"routing policy {self.policy.name!r} chose replica "
                     f"{pick} of {len(self.replicas)}")
             self.queue.popleft()
+            if self.tracer.enabled:
+                self.tracer.event("dispatch", rid=req.rid, to_replica=pick)
             self.replicas[pick].submit(req)
             self.stats.dispatched[pick] += 1
 
@@ -349,6 +376,7 @@ class ReplicaRouter:
         all of them in ``sync`` mode (lock-step), only the busy ones
         otherwise.  Replica clocks are pinned to the router clock so
         arrival gating and TTFT are measured in router steps."""
+        self.tracer.now = self.t
         self._dispatch()
         for sched in self.replicas:
             if self.sync or self._busy(sched):
@@ -357,6 +385,14 @@ class ReplicaRouter:
             else:
                 sched.stats.idle_steps += 1
                 sched.t = self.t + 1
+        if self.tracer.enabled:
+            # One fleet-wide metric row per router tick: the replica scopes
+            # wrote their r{i}/ gauges during ``sched.step()`` above
+            # (owns_snapshots off), the router adds its own and snaps.
+            m = self.tracer.metrics
+            m.gauge("queue_depth", len(self.queue))
+            m.gauge("requeues", self.stats.requeues)
+            self.tracer.snap(self.t)
         self.t += 1
         self.stats.router_steps += 1
 

@@ -65,6 +65,7 @@ from repro.serving.kvcache import KVSlotAllocator
 from repro.serving.paging import PagedKVSlotAllocator, pages_for
 from repro.serving.policies import SloClasses
 from repro.serving.slots import FREE, ParkedGroup, SlotTable, SwapLedger
+from repro.serving.telemetry import as_scope, kblock_stats
 
 
 @dataclasses.dataclass
@@ -82,7 +83,12 @@ class Request:
     # runtime state (owned by the scheduler)
     admitted_step: int = -1
     finished_step: int = -1
-    first_token_step: int = -1    # step the first output token appeared
+    ttft: int = -1                # time to first token: decode steps between
+                                  # arrival and the first generated token
+                                  # (0 = first token the step it arrived);
+                                  # -1 before the first token lands.
+                                  # Queueing delay included — the latency an
+                                  # SLO deadline is written against.
     preempted: int = 0            # times this request's slot was parked
     output: list = dataclasses.field(default_factory=list)
     fed: int = 0                  # prompt tokens consumed so far (ramp cursor)
@@ -93,23 +99,25 @@ class Request:
         return self.fed < len(self.prompt)
 
     @property
+    def first_token_step(self) -> int:
+        """Deprecated alias: the absolute scheduler step the first output
+        token appeared (-1 before it lands).  ``ttft`` — the same moment
+        measured relative to arrival — is the single latency source now;
+        this stays only for pre-PR 8 callers."""
+        import warnings
+        warnings.warn("Request.first_token_step is deprecated; use "
+                      "Request.ttft (arrival-relative) instead",
+                      DeprecationWarning, stacklevel=2)
+        return self.arrival + self.ttft if self.ttft >= 0 else -1
+
+    @property
     def ramp_latency(self) -> int:
         """Decode steps from admission to the first generated token
         (inclusive); -1 before the first token lands.  ~ceil(Lp/chunk)
         under chunked prefill, Lp under the classic one-token ramp."""
-        if self.first_token_step < 0 or self.admitted_step < 0:
+        if self.ttft < 0 or self.admitted_step < 0:
             return -1
-        return self.first_token_step - self.admitted_step + 1
-
-    @property
-    def ttft(self) -> int:
-        """Time to first token: decode steps between arrival and the first
-        generated token (0 = first token the step it arrived); -1 before
-        the first token lands.  Queueing delay included — the latency an
-        SLO deadline is written against."""
-        if self.first_token_step < 0:
-            return -1
-        return self.first_token_step - self.arrival
+        return self.arrival + self.ttft - self.admitted_step + 1
 
     @property
     def done(self) -> bool:
@@ -119,7 +127,7 @@ class Request:
         """Copy with runtime state reset, so a trace can be replayed by
         several engines/schedulers."""
         return dataclasses.replace(self, output=[], fed=0, admitted_step=-1,
-                                   finished_step=-1, first_token_step=-1,
+                                   finished_step=-1, ttft=-1,
                                    preempted=0, rng=None)
 
 
@@ -269,7 +277,7 @@ class ContinuousScheduler:
     ``cfg.serving`` so a config fully describes the serving behaviour."""
 
     def __init__(self, engine: Engine, *, policy=None, preempt=None,
-                 eviction=None, sampling=None):
+                 eviction=None, sampling=None, tracer=None):
         self.engine = engine
         cfg = engine.cfg
         self.slo = SloClasses(cfg.serving.slo_classes)
@@ -333,6 +341,18 @@ class ContinuousScheduler:
         self.t = 0                       # scheduler clock (steps)
         self.stats = SchedulerStats(
             slot_active_steps=np.zeros(self.n_slots, np.int64))
+        self.set_tracer(tracer)
+
+    def set_tracer(self, tracer) -> None:
+        """Attach a telemetry recorder (``serving/telemetry.py``) to this
+        scheduler and everything it owns — engine, allocator, swap ledger.
+        ``tracer`` may be a ``Tracer`` (bound to replica scope 0), an
+        existing scope (a router hands each replica its own), or None (the
+        ``NULL_TRACER`` no-op default: the untraced path is untouched)."""
+        self.tracer = as_scope(tracer)
+        self.engine.tracer = self.tracer
+        self.allocator.tracer = self.tracer
+        self.ledger.tracer = self.tracer
 
     # -- queue (delegated to the admission policy) -----------------------------
 
@@ -367,7 +387,18 @@ class ContinuousScheduler:
     def submit(self, req: Request) -> None:
         reason = self.accepts(req)
         if reason is not None:
+            if self.tracer.enabled:
+                self.tracer.event("reject", ts=max(self.t, req.arrival),
+                                  rid=req.rid, reason=reason.split(";")[0])
             raise ValueError(reason)
+        if self.tracer.enabled and self.tracer.emit_submit:
+            # Lifecycle span opens at arrival (requests are usually
+            # submitted up front with future arrival times), never before
+            # the clock a late submit happens at.
+            self.tracer.event("submit", ts=max(self.t, req.arrival),
+                              rid=req.rid, prompt_len=len(req.prompt),
+                              max_new_tokens=req.max_new_tokens,
+                              slo=req.slo)
         self.requests[req.rid] = req
         self.admission.push(req)
 
@@ -600,6 +631,9 @@ class ContinuousScheduler:
                 self.lane_end[s, li] = e
             self.lane_end[s, l] = all_ends[-1]
             req.admitted_step = self.t
+            if self.tracer.enabled:
+                self.tracer.event("admit", rid=req.rid, slot=s, lane=l,
+                                  pos=pos, horizon=int(all_ends[-1]))
             n += 1
         return n
 
@@ -668,6 +702,9 @@ class ContinuousScheduler:
             req.preempted += 1
             self.table.release(victim, l)
             lanes[l] = req
+            if self.tracer.enabled:
+                self.tracer.event("preempt", rid=req.rid, slot=victim,
+                                  lane=l, pos=int(self.pos[victim]))
         self.ledger.append(ParkedGroup(
             lanes=lanes, pos=int(self.pos[victim]),
             horizon=int(self.lane_end[victim].max()), parked_step=self.t,
@@ -717,6 +754,10 @@ class ContinuousScheduler:
             self.pos[slot] = group.pos
             for l, req in group.lanes.items():
                 self.table.occupy(slot, l, req.rid)
+                if self.tracer.enabled:
+                    self.tracer.event("resume", rid=req.rid, slot=slot,
+                                      lane=l, pos=group.pos,
+                                      parked_steps=self.t - group.parked_step)
             idx, ends, _ = self._slot_horizons(slot, group.pos)
             for l, e in zip(idx, ends):
                 self.lane_end[slot, l] = e
@@ -729,12 +770,13 @@ class ContinuousScheduler:
     def step(self) -> None:
         """Admit, run one jitted decode step for all B slots, then ramp /
         sample / retire per lane."""
+        self.tracer.now = self.t
         self._admit()
         if self.chunk > 1:
-            mask, released = self._run_chunked_step()
+            mask, released, advance = self._run_chunked_step()
         else:
-            mask, released = self._run_single_step()
-        self._finish_step(mask, released)
+            mask, released, advance = self._run_single_step()
+        self._finish_step(mask, released, advance)
 
     def _run_single_step(self):
         """Legacy one-token step: every live lane feeds exactly one token
@@ -783,7 +825,7 @@ class ContinuousScheduler:
                     if req.ramping:      # prompt not fully consumed yet
                         continue
                 self._emit(req, logits[s, l], s, l, released)
-        return mask, released
+        return mask, released, None
 
     def _run_chunked_step(self):
         """Chunked-prefill step (``prefill_chunk`` C > 1): each ramping lane
@@ -849,14 +891,17 @@ class ContinuousScheduler:
                 else:
                     row = 0
                 self._emit(req, logits[s, l, row], s, l, released)
-        return mask, released
+        return mask, released, valid
 
     def _emit(self, req: Request, lane_logits, s: int, l: int,
               released: set) -> None:
         """Sample one token for a lane; retire it on EOS / length budget."""
         tok = self.sampling.select(req, lane_logits)
         if not req.output:
-            req.first_token_step = self.t
+            req.ttft = self.t - req.arrival
+            if self.tracer.enabled:
+                self.tracer.event("first_token", rid=req.rid, slot=s, lane=l,
+                                  ttft=req.ttft)
         req.output.append(tok)
         self.stats.generated_tokens += 1
         if (len(req.output) >= req.max_new_tokens or
@@ -867,8 +912,12 @@ class ContinuousScheduler:
             req.finished_step = self.t
             self.finished.append(req)
             self.stats.finished += 1
+            if self.tracer.enabled:
+                self.tracer.event("retire", rid=req.rid, slot=s, lane=l,
+                                  tokens=len(req.output),
+                                  preempted=req.preempted)
 
-    def _finish_step(self, mask, released) -> None:
+    def _finish_step(self, mask, released, advance=None) -> None:
         if self.paged:
             # Free-on-retire: recycle drained slots eagerly so their pages
             # return to the pool now, not at the next admission into them.
@@ -884,6 +933,42 @@ class ContinuousScheduler:
         self.stats.decode_steps += 1
         self.stats.occupancy_sum += float(mask.mean())
         self.stats.slot_active_steps += (mask.sum(axis=1) > 0)
+        tr = self.tracer
+        if tr.enabled:
+            # Per-slot timeline: one duration event per live slot per step
+            # (``advance`` is the chunked per-slot position take, None for
+            # the one-token step), then the per-step metric snapshot.
+            live = mask.sum(axis=1) > 0
+            for s in range(self.n_slots):
+                if not live[s]:
+                    continue
+                adv = 1 if advance is None else int(advance[s])
+                tr.event("slot_step", slot=s, lanes=int(mask[s].sum()),
+                         advance=adv, ramping=adv > 1)
+            m = tr.metrics
+            m.gauge("queue_depth", self._waiting())
+            m.gauge("live_lanes", int(mask.sum()))
+            m.gauge("parked_groups", len(self.ledger))
+            m.gauge("generated_tokens", self.stats.generated_tokens)
+            m.gauge("decode_steps", self.stats.decode_steps)
+            m.gauge("preemptions", self.stats.preemptions)
+            if self.paged:
+                table = self.allocator.table
+                m.gauge("pages_in_use", table.pages_in_use)
+                m.gauge("free_pages", table.free_pages)
+                m.gauge("peak_pages", table.peak_in_use)
+                if self.engine.cfg.serving.use_kernel:
+                    # PR 7's bench-only grid probe, lifted into telemetry:
+                    # grid steps and compute-skipped K-blocks of this
+                    # step's kernel launch (per layer — every layer runs
+                    # the same grid over the same block table).
+                    grid, skipped, _ = kblock_stats(
+                        np.asarray(self.allocator.table.rows),
+                        self.engine.cfg.serving.kblock_pages,
+                        self.engine.cfg.n_kv_heads)
+                    m.count("kernel_grid_steps", grid)
+                    m.count("kernel_skipped_blocks", skipped)
+            tr.snap(self.t)
         self.t += 1
 
     # -- drive a whole trace ------------------------------------------------------
@@ -901,6 +986,8 @@ class ContinuousScheduler:
             nxt = self._next_arrival()
             if not self.table.live_requests() and not len(self.ledger) and \
                     nxt is not None and nxt > self.t:
+                if self.tracer.enabled:
+                    self.tracer.event("idle", ts=self.t, gap=nxt - self.t)
                 self.stats.idle_steps += nxt - self.t
                 self.t = nxt
             self.step()

@@ -26,6 +26,8 @@ from typing import Any, Iterator, Optional
 
 import numpy as np
 
+from repro.serving.telemetry import NULL_TRACER
+
 FREE = -1
 
 
@@ -53,15 +55,29 @@ class SwapLedger:
 
     def __init__(self):
         self._groups: collections.deque[ParkedGroup] = collections.deque()
+        # Telemetry recorder; rebound by ``ContinuousScheduler.set_tracer``.
+        self.tracer = NULL_TRACER
 
     def append(self, group: ParkedGroup) -> None:
+        if self.tracer.enabled:
+            self.tracer.event("swap_out",
+                              rids=[r.rid for r in group.lanes.values()],
+                              pos=group.pos,
+                              reserved_pages=group.reserved_pages)
         self._groups.append(group)
 
     def head(self) -> ParkedGroup:
         return self._groups[0]
 
     def popleft(self) -> ParkedGroup:
-        return self._groups.popleft()
+        group = self._groups.popleft()
+        if self.tracer.enabled:
+            self.tracer.event("swap_in",
+                              rids=[r.rid for r in group.lanes.values()],
+                              pos=group.pos,
+                              parked_steps=self.tracer.now
+                              - group.parked_step)
+        return group
 
     def __len__(self) -> int:
         return len(self._groups)

@@ -17,7 +17,11 @@ interleaving of arrivals, ramps, chunk widths, priorities, and retirements:
   * preempt-and-swap (ISSUE 5): under random two-class traces with
     ``policy="slo"`` + ``preempt=True``, page conservation extends over the
     swap ledger's parked rows, no preempted request loses tokens, the
-    ledger drains, and paged == contiguous still holds.
+    ledger drains, and paged == contiguous still holds;
+  * telemetry lifecycle (PR 8): with a ``Tracer`` attached, every admitted
+    rid opens and closes exactly one submit→admit→retire span, no span
+    survives the drain, and preempt/resume events pair and nest correctly
+    (``Tracer.lifecycle_errors`` re-checks the full event stream).
 
 Runs with real ``hypothesis`` when installed (CI) and with the
 deterministic stub in ``conftest.py`` otherwise — both draw from the
@@ -35,6 +39,7 @@ from repro.configs.base import ModelConfig, MuxConfig, ServingConfig
 from repro.models import Backbone
 from repro.serving.engine import Engine
 from repro.serving.scheduler import ContinuousScheduler, Request
+from repro.serving.telemetry import Tracer
 
 # Tiny causal dense backbone: decode-with-cache is exact and batch rows are
 # independent, so every divergence the fuzz finds is a scheduler/paging bug,
@@ -116,7 +121,7 @@ def test_fuzz_trace_invariants(seed, chunk, page_size, policy, kblock):
     # horizons; the paged pool is the dense equivalent of that budget.
     max_len = CFG.mux.prefix_len + 4 * (6 + 6)
 
-    def build(paged):
+    def build(paged, tracer):
         # The paged side runs the Pallas decode kernel with a fuzzed
         # K-block width and the fused demux epilogue on — paged ==
         # contiguous below therefore also pins the MXU-shaped kernel path
@@ -127,12 +132,20 @@ def test_fuzz_trace_invariants(seed, chunk, page_size, policy, kblock):
                                 fuse_demux=paged)
         cfg = dataclasses.replace(CFG, serving=serving)
         eng = Engine(PARAMS, cfg, batch=N_SLOTS, max_len=max_len)
-        return ContinuousScheduler(eng, policy=policy)
+        return ContinuousScheduler(eng, policy=policy, tracer=tracer)
 
-    sched_c = build(paged=False)
+    tr_c, tr_p = Tracer(), Tracer()
+    sched_c = build(paged=False, tracer=tr_c)
     out_c = _drive(sched_c, [r.fresh() for r in trace])
-    sched_p = build(paged=True)
+    sched_p = build(paged=True, tracer=tr_p)
     out_p = _drive(sched_p, [r.fresh() for r in trace])
+
+    # telemetry lifecycle: one matched submit/admit/retire span per rid,
+    # none dangling after drain, timestamps monotone per rid
+    assert tr_c.lifecycle_errors() == []
+    assert tr_p.lifecycle_errors() == []
+    retired = {e.rid for e in tr_p.events if e.kind == "retire"}
+    assert retired == {r.rid for r in trace}
 
     # every submitted request completed, with exactly its budget
     # (eos_id is None in these traces, so length is the only stop)
@@ -168,19 +181,32 @@ def test_fuzz_preempt_resume_invariants(seed, chunk):
     from repro.serving.paging import pages_for
     pool = 2 * N_SLOTS * pages_for(max_len, page_size) + 1
 
-    def build(paged):
+    def build(paged, tracer):
         serving = ServingConfig(paged=paged, page_size=page_size,
                                 pool_pages=pool if paged else 0,
                                 prefill_chunk=chunk, policy="slo",
                                 preempt=True)
         cfg = dataclasses.replace(CFG, serving=serving)
         eng = Engine(PARAMS, cfg, batch=N_SLOTS, max_len=max_len)
-        return ContinuousScheduler(eng)
+        return ContinuousScheduler(eng, tracer=tracer)
 
-    sched_c = build(paged=False)
+    tr_c, tr_p = Tracer(), Tracer()
+    sched_c = build(paged=False, tracer=tr_c)
     out_c = _drive(sched_c, [r.fresh() for r in trace])
-    sched_p = build(paged=True)
+    sched_p = build(paged=True, tracer=tr_p)
     out_p = _drive(sched_p, [r.fresh() for r in trace])
+
+    # telemetry lifecycle under preemption: preempt/resume pairs balance
+    # and nest inside each rid's admit..retire span, nothing dangles
+    assert tr_c.lifecycle_errors() == []
+    assert tr_p.lifecycle_errors() == []
+    for tr, sched in ((tr_c, sched_c), (tr_p, sched_p)):
+        n_pre = sum(e.kind == "preempt" for e in tr.events)
+        n_res = sum(e.kind == "resume" for e in tr.events)
+        assert n_pre == n_res
+        # events are per (rid, lane); stats count parked groups — every
+        # group parks >= 1 lane, so the event count dominates
+        assert n_pre >= sched.stats.preemptions
 
     # no token loss through park/resume: every request completes with
     # exactly its budget, preempted or not

@@ -1,0 +1,229 @@
+"""Serving telemetry layer (PR 8): lifecycle spans, metrics, export.
+
+The contract under test, in order of importance:
+
+  1. zero interference — the same trace produces bitwise-identical tokens
+     and step counts with telemetry on and off (bare scheduler and the
+     preempting replica-router path);
+  2. fidelity — replaying a fixed trace, the span sequence per request
+     reconstructs the scheduler's own canonical record exactly (submit at
+     arrival, admit at ``admitted_step``, first_token at
+     ``arrival + ttft``, retire at ``finished_step``, one preempt/resume
+     pair per park);
+  3. export — the Chrome/Perfetto JSON and metrics JSONL pass the same
+     schema check CI runs (``tools/check_trace.py``);
+  4. naming — ``Request.ttft`` is the single latency source;
+     ``first_token_step`` stays as a deprecated alias pinned equal.
+"""
+import dataclasses
+import importlib.util
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, MuxConfig, ServingConfig
+from repro.models import Backbone
+from repro.serving.engine import Engine
+from repro.serving.router import ReplicaRouter
+from repro.serving.scheduler import (ContinuousScheduler, Request,
+                                     poisson_trace)
+from repro.serving.telemetry import (NULL_TRACER, NullTracer, Tracer,
+                                     as_scope, page_pool_timeline,
+                                     trace_summary, ttft_histogram)
+
+CFG = ModelConfig(
+    name="telemetry-tiny", family="dense", n_layers=2, d_model=64,
+    n_heads=2, n_kv_heads=2, d_ff=128, vocab=128, dtype="float32",
+    param_dtype="float32", remat="none",
+    mux=MuxConfig(n=2, strategy="hadamard", demux="index_embed"))
+PARAMS = Backbone.init(jax.random.PRNGKey(0), CFG)
+N_SLOTS = 2
+
+
+def _check_trace_module():
+    """Import tools/check_trace.py (not a package) by path."""
+    path = os.path.join(os.path.dirname(__file__), os.pardir, "tools",
+                        "check_trace.py")
+    spec = importlib.util.spec_from_file_location("check_trace", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _build(tracer=None, *, preempt=False, policy="fifo", max_len=60):
+    serving = ServingConfig(paged=True, page_size=4,
+                            policy="slo" if preempt else policy,
+                            preempt=preempt)
+    cfg = dataclasses.replace(CFG, serving=serving)
+    eng = Engine(PARAMS, cfg, batch=N_SLOTS, max_len=max_len)
+    return ContinuousScheduler(eng, tracer=tracer)
+
+
+def _preempt_trace():
+    """Deterministic park/resume: long batch generations saturate both
+    slots, then a latency burst arrives on the full grid."""
+    rng = np.random.default_rng(0)
+    victims = [Request(rid=i,
+                       prompt=rng.integers(0, CFG.vocab, 3).astype(np.int32),
+                       max_new_tokens=12, slo="batch")
+               for i in range(N_SLOTS * CFG.mux.n)]
+    burst = [Request(rid=100 + i,
+                     prompt=rng.integers(0, CFG.vocab, 3).astype(np.int32),
+                     max_new_tokens=3, arrival=3, slo="latency")
+             for i in range(2)]
+    return victims + burst
+
+
+def _outputs(sched):
+    return {q.rid: list(q.output) for q in sched.finished}
+
+
+def test_traced_scheduler_bitwise_identical():
+    trace = poisson_trace(10, rate=2.0, prompt_len=3, gen_len=5,
+                          vocab=CFG.vocab, max_total=30, seed=0)
+    plain = _build()
+    s_plain = plain.run([r.fresh() for r in trace])
+    tracer = Tracer()
+    traced = _build(tracer)
+    s_traced = traced.run([r.fresh() for r in trace])
+    assert _outputs(plain) == _outputs(traced)
+    assert s_plain.decode_steps == s_traced.decode_steps
+    assert s_plain.generated_tokens == s_traced.generated_tokens
+    assert tracer.lifecycle_errors() == []
+    assert len(tracer.events) > 0
+
+
+def test_traced_router_preempt_bitwise_identical():
+    """The acceptance path: a preempt + router serve traced vs untraced."""
+    trace = poisson_trace(16, rate=4.0, prompt_len=3, gen_len=5,
+                          vocab=CFG.vocab, max_total=30, seed=1,
+                          slo_mix=0.25)
+    serving = ServingConfig(paged=True, page_size=4, policy="slo",
+                            preempt=True)
+    cfg = dataclasses.replace(CFG, serving=serving)
+
+    def run(tracer):
+        router = ReplicaRouter.build(PARAMS, cfg, batch=N_SLOTS, max_len=60,
+                                     replicas=2, policy="least_loaded",
+                                     tracer=tracer)
+        stats = router.run([r.fresh() for r in trace])
+        return _outputs(router), stats
+
+    out_plain, s_plain = run(None)
+    tracer = Tracer()
+    out_traced, s_traced = run(tracer)
+    assert out_plain == out_traced
+    assert s_plain.decode_steps == s_traced.decode_steps
+    assert s_plain.router_steps == s_traced.router_steps
+    assert tracer.lifecycle_errors() == []
+    # one dispatch span origin per admitted request, opened at the router
+    dispatched = [e for e in tracer.events if e.kind == "dispatch"]
+    assert len(dispatched) == len(trace)
+    assert all(e.replica < 0 for e in dispatched)  # emitted by router scope
+
+
+def test_span_sequence_matches_scheduler_log():
+    """Replay a fixed preempting trace: the spans must reconstruct the
+    scheduler's own canonical per-request record exactly."""
+    tracer = Tracer()
+    sched = _build(tracer, preempt=True)
+    stats = sched.run([r.fresh() for r in _preempt_trace()])
+    assert stats.preemptions > 0, "fixture no longer preempts"
+    assert tracer.lifecycle_errors() == []
+    for q in sched.finished:
+        log = tracer.request_log(q.rid)
+        kinds = [e.kind for e in log]
+        assert kinds[0] == "submit" and log[0].ts == q.arrival
+        assert kinds[-1] == "retire" and log[-1].ts == q.finished_step
+        admit = next(e for e in log if e.kind == "admit")
+        assert admit.ts == q.admitted_step
+        first = next(e for e in log if e.kind == "first_token")
+        assert first.ts == q.arrival + q.ttft
+        assert sum(k == "preempt" for k in kinds) == q.preempted
+        assert sum(k == "resume" for k in kinds) == q.preempted
+        retire = log[-1]
+        assert retire.args["tokens"] == len(q.output) == q.max_new_tokens
+    # park/resume traffic also hit the swap ledger events
+    assert any(e.kind == "swap_out" for e in tracer.events)
+    assert any(e.kind == "swap_in" for e in tracer.events)
+
+
+def test_chrome_trace_and_metrics_pass_schema_check(tmp_path):
+    check = _check_trace_module()
+    tracer = Tracer()
+    sched = _build(tracer, preempt=True)
+    sched.run([r.fresh() for r in _preempt_trace()])
+    trace_path = str(tmp_path / "t.trace.json")
+    metrics_path = str(tmp_path / "m.jsonl")
+    n = tracer.export_chrome(trace_path)
+    tracer.metrics.write_jsonl(metrics_path)
+    assert n > 0
+    assert check.check_trace(trace_path) == []
+    assert check.check_metrics(metrics_path) == []
+    # spot-check the span tree: every traced request has one async begin
+    # and one async end of its top-level span
+    doc = json.load(open(trace_path))
+    for rid in tracer.request_ids():
+        opens = [e for e in doc["traceEvents"]
+                 if e["ph"] == "b" and e.get("id") == str(rid)
+                 and e["name"] == f"request {rid}"]
+        closes = [e for e in doc["traceEvents"]
+                  if e["ph"] == "e" and e.get("id") == str(rid)
+                  and e.get("name") == f"request {rid}"]
+        assert len(opens) == 1 and len(closes) == 1
+        assert closes[0]["ts"] >= opens[0]["ts"]
+
+
+def test_metrics_rows_and_summary():
+    tracer = Tracer()
+    sched = _build(tracer, preempt=True)
+    stats = sched.run([r.fresh() for r in _preempt_trace()])
+    steps = [r["step"] for r in tracer.metrics.rows]
+    assert steps == sorted(steps) and len(steps) > 0
+    assert all(k == "step" or k.startswith("r0/")
+               for r in tracer.metrics.rows for k in r)
+    # the per-step gauges end at the run's own totals
+    last = tracer.metrics.rows[-1]
+    assert last["r0/generated_tokens"] == stats.generated_tokens
+    assert last["r0/decode_steps"] == stats.decode_steps
+    # trace-derived summaries: TTFT histogram covers every finished
+    # request; the page-pool high-water equals the scheduler's peak
+    hist = ttft_histogram(tracer)
+    assert sum(hist.values()) == len(sched.finished)
+    pool = page_pool_timeline(tracer)
+    assert pool["high_water"] == stats.peak_pages
+    summary = trace_summary(tracer)
+    assert summary["events"] == len(tracer.events)
+    assert summary["ttft_hist"] == hist
+
+
+def test_null_tracer_is_inert_default():
+    sched = _build()
+    assert not sched.tracer.enabled
+    assert sched.engine.tracer is sched.tracer
+    assert sched.allocator.tracer is sched.tracer
+    assert as_scope(None) is NULL_TRACER
+    assert isinstance(NULL_TRACER, NullTracer)
+    # events/metrics sinks are no-ops: nothing accumulates anywhere
+    NULL_TRACER.event("slot_step", slot=0)
+    NULL_TRACER.metrics.count("x")
+    NULL_TRACER.snap(3)
+
+
+def test_first_token_step_is_deprecated_alias():
+    trace = poisson_trace(4, rate=2.0, prompt_len=3, gen_len=4,
+                          vocab=CFG.vocab, max_total=20, seed=2)
+    sched = _build()
+    sched.run([r.fresh() for r in trace])
+    assert sched.finished
+    for q in sched.finished:
+        assert q.ttft >= 0
+        with pytest.warns(DeprecationWarning):
+            assert q.first_token_step == q.arrival + q.ttft
+    unfinished = Request(rid=99, prompt=np.zeros(2, np.int32),
+                         max_new_tokens=2)
+    with pytest.warns(DeprecationWarning):
+        assert unfinished.first_token_step == -1

@@ -1,0 +1,125 @@
+"""Minimal Chrome/Perfetto traceEvents + metrics-JSONL schema check.
+
+    python tools/check_trace.py out.trace.json [--metrics out.jsonl]
+
+Stdlib-only (runs in CI before any heavyweight import): validates the JSON
+``repro.launch.serve --trace/--metrics`` writes — required fields per event
+phase, balanced async begin/end pairs per (cat, id), numeric non-negative
+timestamps, and one well-formed snapshot object per JSONL line.  It checks
+the *container format* Perfetto parses, not serving semantics — those are
+pinned by ``tests/test_telemetry.py``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# Phases serving/telemetry.py emits and the fields each requires beyond the
+# common ones.  "b"/"e" (async span) additionally pair up on (cat, id).
+PHASE_FIELDS = {
+    "M": ("name",),                          # metadata (process/thread names)
+    "X": ("name", "ts", "dur", "pid", "tid"),  # complete duration
+    "i": ("name", "ts", "pid", "tid"),       # instant
+    "n": ("name", "ts", "pid", "tid"),       # async instant
+    "b": ("name", "cat", "id", "ts", "pid"),   # async begin
+    "e": ("cat", "id", "ts", "pid"),         # async end
+    "C": ("name", "ts", "pid", "args"),      # counter
+}
+
+
+def check_trace(path: str) -> list:
+    """Return a list of schema-violation strings (empty = valid)."""
+    errors = []
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: not loadable JSON: {e}"]
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        return [f"{path}: top level must be an object with 'traceEvents'"]
+    events = doc["traceEvents"]
+    if not isinstance(events, list) or not events:
+        return [f"{path}: 'traceEvents' must be a non-empty array"]
+    open_spans = {}
+    for i, ev in enumerate(events):
+        where = f"traceEvents[{i}]"
+        if not isinstance(ev, dict):
+            errors.append(f"{where}: not an object")
+            continue
+        ph = ev.get("ph")
+        if ph not in PHASE_FIELDS:
+            errors.append(f"{where}: unknown/missing ph {ph!r}")
+            continue
+        for field in PHASE_FIELDS[ph]:
+            if field not in ev:
+                errors.append(f"{where}: ph={ph!r} missing {field!r}")
+        ts = ev.get("ts")
+        if "ts" in PHASE_FIELDS[ph] and \
+                (not isinstance(ts, (int, float)) or ts < 0):
+            errors.append(f"{where}: ts {ts!r} not a non-negative number")
+        if ph in ("b", "e") and "cat" in ev and "id" in ev:
+            key = (ev["cat"], ev["id"])
+            if ph == "b":
+                open_spans[key] = open_spans.get(key, 0) + 1
+            elif open_spans.get(key, 0) > 0:
+                open_spans[key] -= 1
+            else:
+                errors.append(f"{where}: async end {key} with no open begin")
+    for key, n in open_spans.items():
+        if n:
+            errors.append(f"async span {key}: {n} begin(s) never closed")
+    return errors
+
+
+def check_metrics(path: str) -> list:
+    """Validate a metrics JSONL file: one snapshot object per line with a
+    monotonically non-decreasing integer 'step'."""
+    errors = []
+    last = None
+    try:
+        with open(path) as f:
+            lines = f.read().splitlines()
+    except OSError as e:
+        return [f"{path}: unreadable: {e}"]
+    if not lines:
+        return [f"{path}: empty metrics file"]
+    for i, line in enumerate(lines, 1):
+        try:
+            row = json.loads(line)
+        except json.JSONDecodeError as e:
+            errors.append(f"{path}:{i}: not JSON: {e}")
+            continue
+        if not isinstance(row, dict) or not isinstance(row.get("step"), int):
+            errors.append(f"{path}:{i}: needs an integer 'step' field")
+            continue
+        if last is not None and row["step"] < last:
+            errors.append(f"{path}:{i}: step {row['step']} < previous {last}")
+        last = row["step"]
+        for k, v in row.items():
+            if not isinstance(v, (int, float)):
+                errors.append(f"{path}:{i}: {k!r} is non-numeric ({v!r})")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="Chrome traceEvents JSON to validate")
+    ap.add_argument("--metrics", help="metrics JSONL to validate too")
+    args = ap.parse_args(argv)
+    errors = check_trace(args.trace)
+    if args.metrics:
+        errors += check_metrics(args.metrics)
+    for e in errors:
+        print(f"[check_trace] {e}", file=sys.stderr)
+    if errors:
+        print(f"[check_trace] FAILED: {len(errors)} schema violations",
+              file=sys.stderr)
+        return 1
+    targets = args.trace + (f" + {args.metrics}" if args.metrics else "")
+    print(f"[check_trace] OK: {targets}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
