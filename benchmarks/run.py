@@ -27,7 +27,8 @@ import time
 from benchmarks import (common, decode_kernel, heads_ablation, image_mux,
                         index_variance, memory_overhead, mux_strategies,
                         paging, retrieval_acc, roofline, router,
-                        small_models, task_acc_vs_n, throughput_vs_n)
+                        serving_moe, small_models, task_acc_vs_n,
+                        throughput_vs_n)
 
 SUITES = {
     "fig3": task_acc_vs_n.run,        # task acc vs N
@@ -45,6 +46,7 @@ SUITES = {
     "preempt": paging.run_preempt,    # preempt-and-swap SLO classes
     "router": router.run,             # replica-router scaling R=1,2,4
     "decode_kernel": decode_kernel.run,  # K-block grid + fused demux
+    "moe": serving_moe.run,           # MoE + MLA chunked/paged serving
 }
 
 # Keys ``--check`` compares.  Only scheduler-determined counts qualify: the

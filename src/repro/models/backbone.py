@@ -91,6 +91,8 @@ def _layer_cache(cfg: ModelConfig, kind: dict, batch: int, max_len: int,
             return Attention.init_paged_cache(acfg, *page_pool, dtype)
         return Attention.init_cache(acfg, batch, max_len, dtype)
     if mixer == "mla":
+        if page_pool is not None and paged_eligible(kind["window"], max_len):
+            return MLA.init_paged_cache(cfg.mla, *page_pool, dtype)
         return MLA.init_cache(cfg.mla, batch, max_len, dtype)
     if mixer == "mamba":
         return Mamba.init_cache(cfg.mamba, batch, dtype)
@@ -103,17 +105,17 @@ def _layer_cache(cfg: ModelConfig, kind: dict, batch: int, max_len: int,
 
 def _layer_apply(p, x, cfg: ModelConfig, kind: dict, *, positions,
                  cache=None, cache_index=None, cross_kv=None,
-                 block_table=None, chunk_lens=None, mesh=None,
+                 block_table=None, chunk_lens=None, row_mask=None, mesh=None,
                  mesh_info: MeshInfo = SINGLE):
     norm = make_norm(cfg.norm)
     mixer = kind["mixer"]
     aux = jnp.zeros((), jnp.float32)
     new_cache = None
-    if chunk_lens is not None and mixer not in ("attn", "mla"):
+    if chunk_lens is not None and mixer in ("mlstm", "slstm"):
         raise ValueError(
             f"chunked decode (serving.prefill_chunk > 1) is not supported "
-            f"for {mixer!r} mixers — recurrent state has no per-row "
-            f"validity; set prefill_chunk=1 for SSM/hybrid archs")
+            f"for {mixer!r} mixers — xLSTM state updates have no row-masked "
+            f"form yet; set prefill_chunk=1 for xLSTM archs")
     h = norm.apply(p["norm1"], x)
     if mixer == "attn":
         out, new_cache = Attention.apply(
@@ -123,9 +125,11 @@ def _layer_apply(p, x, cfg: ModelConfig, kind: dict, *, positions,
     elif mixer == "mla":
         out, new_cache = MLA.apply(p["attn"], h, cfg.mla, positions=positions,
                                    cache=cache, cache_index=cache_index,
+                                   block_table=block_table,
                                    chunk_lens=chunk_lens)
     elif mixer == "mamba":
-        out, new_cache = Mamba.apply(p["mamba"], h, cfg.mamba, cache=cache)
+        out, new_cache = Mamba.apply(p["mamba"], h, cfg.mamba, cache=cache,
+                                     chunk_lens=chunk_lens)
     elif mixer == "mlstm":
         out, new_cache = MLSTM.apply(p["mlstm"], h, cfg.xlstm, cache=cache)
     elif mixer == "slstm":
@@ -145,7 +149,8 @@ def _layer_apply(p, x, cfg: ModelConfig, kind: dict, *, positions,
         x = x + MLP.apply(p["mlp"], h, activation=cfg.activation)
     elif kind["mlp"] == "moe":
         h = norm.apply(p["norm2"], x)
-        out, aux = MoE.apply(p["moe"], h, cfg.moe, mesh_info, mesh=mesh)
+        out, aux = MoE.apply(p["moe"], h, cfg.moe, mesh_info, mesh=mesh,
+                             row_mask=row_mask)
         x = x + out
     return x, new_cache, aux
 
@@ -235,10 +240,10 @@ class Backbone:
     def init_cache(cfg: ModelConfig, batch: int, max_len: int,
                    dtype=None, *, page_pool=None) -> Params:
         """``page_pool``: optional (pool_pages, page_size) — eligible
-        full-attention layers get pooled paged K/V (see
-        ``serving/paging.py``) instead of per-slot contiguous regions.
-        Windowed ring buffers, MLA latents, and SSM states stay contiguous
-        either way."""
+        full-attention layers get pooled paged K/V and MLA layers pooled
+        paged latents (see ``serving/paging.py``) instead of per-slot
+        contiguous regions.  Windowed ring buffers and SSM states stay
+        contiguous either way."""
         dtype = dtype or cfg.compute_dtype
         kinds = cfg.layer_kinds()
         head, period, groups = cfg.layer_pattern()
@@ -304,7 +309,7 @@ class Backbone:
     @staticmethod
     def _run_blocks(params, x, cfg: ModelConfig, *, positions, cache=None,
                     cache_index=None, cross_kv=None, block_table=None,
-                    chunk_lens=None, mesh=None,
+                    chunk_lens=None, row_mask=None, mesh=None,
                     mesh_info: MeshInfo = SINGLE):
         kinds = cfg.layer_kinds()
         head, period, groups = cfg.layer_pattern()
@@ -324,6 +329,7 @@ class Backbone:
                                       cache=lcache, cache_index=cache_index,
                                       cross_kv=ckv, block_table=block_table,
                                       chunk_lens=chunk_lens,
+                                      row_mask=row_mask,
                                       mesh=mesh, mesh_info=mesh_info)
             if sp_spec is not None:
                 x = _constrain(x, mesh, sp_spec)
@@ -533,10 +539,17 @@ class Backbone:
 
         positions = jnp.broadcast_to(
             ci[:, None] if ci.ndim else ci, (b, 1))
+        # Row validity for row-exact MoE dispatch: a slot with no live lane
+        # carries a garbage row that must not compete for expert capacity.
+        # Lock-step ``generate`` passes no lane_mask -> no masking (all rows
+        # are real), keeping that path bitwise-unchanged.
+        row_mask = None
+        if lane_mask is not None:
+            row_mask = lane_mask.astype(bool).any(axis=1)[:, None]   # (B, 1)
         h, new_cache, _ = Backbone._run_blocks(
             params, x, cfg, positions=positions, cache=cache,
             cache_index=ci, cross_kv=cross_kv, block_table=block_table,
-            mesh=mesh, mesh_info=mesh_info)
+            row_mask=row_mask, mesh=mesh, mesh_info=mesh_info)
 
         if mux.active:
             demuxed = _demux_decode(params, h, cfg, index_embeds)
@@ -573,10 +586,19 @@ class Backbone:
                 x = x * lane_mask[:, 0, :, None].astype(x.dtype)
 
         positions = ci[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
+        # Row validity for row-exact MoE dispatch: rows at or past a slot's
+        # chunk_lens are padding, and a row of a slot with no live lane at
+        # that chunk position is a garbage superposition — neither may
+        # compete for expert capacity or pollute the aux statistics.
+        row_mask = jnp.arange(c, dtype=jnp.int32)[None, :] < \
+            chunk_lens[:, None]                                      # (B, C)
+        if lane_mask is not None:
+            row_mask = row_mask & lane_mask.astype(bool).any(axis=1)
         h, new_cache, _ = Backbone._run_blocks(
             params, x, cfg, positions=positions, cache=cache,
             cache_index=ci, cross_kv=cross_kv, block_table=block_table,
-            chunk_lens=chunk_lens, mesh=mesh, mesh_info=mesh_info)
+            chunk_lens=chunk_lens, row_mask=row_mask, mesh=mesh,
+            mesh_info=mesh_info)
 
         if mux.active:
             demuxed = _demux_decode(params, h, cfg, index_embeds)

@@ -47,10 +47,12 @@ class AttnConfig:
 
 
 def paged_eligible(window: Optional[int], max_len: int) -> bool:
-    """Whether an attention layer's decode cache is paged under
-    ``cfg.serving.paged``.  Windowed layers whose ring buffer is already
-    smaller than ``max_len`` keep the bounded contiguous ring — paging them
-    gains nothing and would break the ``pos % slots`` layout."""
+    """Whether an attention-family layer's decode cache is paged under
+    ``cfg.serving.paged``.  Applies to full-attention K/V *and* MLA latent
+    caches — both are position-indexed, so they page identically.  Windowed
+    layers whose ring buffer is already smaller than ``max_len`` keep the
+    bounded contiguous ring — paging them gains nothing and would break the
+    ``pos % slots`` layout."""
     return window is None or window >= max_len
 
 
@@ -600,6 +602,42 @@ class MLA:
         }
 
     @staticmethod
+    def init_paged_cache(cfg: MLAConfig, pool_pages: int, page_size: int,
+                         dtype=jnp.bfloat16):
+        """Pooled latent cache for paged decode: the per-token
+        (kv_lora_rank + rope) latent rows are position-indexed exactly like
+        K/V, so they share the page pool / block-table machinery of
+        ``Attention.init_paged_cache`` unchanged (same trash page 0, same
+        ``pos`` sentinel layout)."""
+        return {
+            "ckv_pages": jnp.zeros((pool_pages, page_size, cfg.kv_lora_rank),
+                                   dtype),
+            "krope_pages": jnp.zeros(
+                (pool_pages, page_size, cfg.qk_rope_head_dim), dtype),
+            "pos": jnp.full((pool_pages, page_size), -1, jnp.int32),
+        }
+
+    @staticmethod
+    def _gather_paged_latents(cache, block_table):
+        """Reassemble each slot's latent rows from the pool in position
+        order (jnp gather reference path): page j of a slot's block table
+        covers positions [j*ps, (j+1)*ps), so gathered index p*ps + off ==
+        the position itself — the same index↔position layout the contiguous
+        cache has.  Unmapped table entries read the trash page with their
+        positions forced to -1, contributing an exact zero to the softmax —
+        the absorbed-matrix attention consumes the gathered block unchanged
+        and bitwise-matches the contiguous path."""
+        bt = block_table                               # (B, max_pages)
+        safe = jnp.maximum(bt, 0)
+        ckv = cache["ckv_pages"][safe]                 # (B, P, ps, r)
+        krope = cache["krope_pages"][safe]
+        pos = jnp.where(bt[:, :, None] >= 0, cache["pos"][safe], -1)
+        b, p, ps = pos.shape
+        return (ckv.reshape(b, p * ps, ckv.shape[-1]),
+                krope.reshape(b, p * ps, krope.shape[-1]),
+                pos.reshape(b, p * ps))
+
+    @staticmethod
     def _queries(params, x, cfg: MLAConfig, positions):
         b, l, _ = x.shape
         q = Linear.apply(params["wq_b"], Linear.apply(params["wq_a"], x))
@@ -624,7 +662,7 @@ class MLA:
 
     @staticmethod
     def apply(params, x, cfg: MLAConfig, *, positions, cache=None,
-              cache_index=None, chunk_lens=None):
+              cache_index=None, block_table=None, chunk_lens=None):
         b, l, _ = x.shape
         q = MLA._queries(params, x, cfg, positions)
         kv_a = Linear.apply(params["wkv_a"], x)
@@ -635,18 +673,41 @@ class MLA:
         if cache is not None and chunk_lens is not None:
             # Chunked decode: write up to C latent rows per slot (invalid
             # rows are exact no-op writes, same gather → where → scatter as
-            # the GQA path), then run the absorbed-matrix attention with a
-            # (B, C) query block.
-            s_len = cache["ckv"].shape[1]
+            # the GQA path; paged: invalid rows land on the trash page),
+            # then run the absorbed-matrix attention with a (B, C) query
+            # block.
             row_ok = jnp.arange(l)[None, :] < jnp.asarray(chunk_lens,
                                                           jnp.int32)[:, None]
             pos_q = jnp.asarray(positions, jnp.int32)
-            idx = (pos_q % s_len).astype(jnp.int32)
-            new_cache = masked_chunk_write(
-                cache, idx, row_ok, {"ckv": ckv, "krope": krope}, pos_q)
-            out = MLA._absorbed_attention(
-                params, q, new_cache["ckv"], new_cache["krope"],
-                new_cache["pos"], pos_q, cfg)
+            if "ckv_pages" in cache:
+                assert block_table is not None, \
+                    "paged MLA cache needs a block_table"
+                ps = cache["pos"].shape[1]
+                rows = jnp.arange(b)[:, None]
+                page_idx = jnp.clip(pos_q // ps, 0, block_table.shape[1] - 1)
+                page_ids = jnp.maximum(block_table[rows, page_idx], 0)
+                page_ids = jnp.where(row_ok, page_ids, 0)  # invalid: trash
+                off = pos_q % ps
+                new_cache = {
+                    "ckv_pages": cache["ckv_pages"].at[page_ids, off].set(
+                        ckv.astype(cache["ckv_pages"].dtype)),
+                    "krope_pages": cache["krope_pages"].at[page_ids, off].set(
+                        krope.astype(cache["krope_pages"].dtype)),
+                    "pos": cache["pos"].at[page_ids, off].set(
+                        jnp.where(row_ok, pos_q, -1)),
+                }
+                ckv_g, krope_g, pos_g = MLA._gather_paged_latents(
+                    new_cache, block_table)
+                out = MLA._absorbed_attention(
+                    params, q, ckv_g, krope_g, pos_g, pos_q, cfg)
+            else:
+                s_len = cache["ckv"].shape[1]
+                idx = (pos_q % s_len).astype(jnp.int32)
+                new_cache = masked_chunk_write(
+                    cache, idx, row_ok, {"ckv": ckv, "krope": krope}, pos_q)
+                out = MLA._absorbed_attention(
+                    params, q, new_cache["ckv"], new_cache["krope"],
+                    new_cache["pos"], pos_q, cfg)
             out = out.reshape(b, l, cfg.n_heads * cfg.v_head_dim)
             return Linear.apply(params["wo"], out), new_cache
 
@@ -674,6 +735,33 @@ class MLA:
                         jnp.broadcast_to(positions, (b, l)).astype(jnp.int32),
                         (0, 0)),
                 }
+        elif "ckv_pages" in cache:
+            # Paged absorbed-matrix decode: the latent write routes through
+            # the block table exactly like the GQA paged path (empty slots
+            # land on the reserved trash page 0); the attention gathers each
+            # slot's pages in position order, so it is bit-for-bit the
+            # contiguous latent cache.
+            assert block_table is not None, \
+                "paged MLA cache needs a block_table"
+            ps = cache["pos"].shape[1]
+            ci_v = jnp.broadcast_to(jnp.asarray(cache_index, jnp.int32), (b,))
+            rows = jnp.arange(b)
+            page_idx = jnp.clip(ci_v // ps, 0, block_table.shape[1] - 1)
+            page_ids = jnp.maximum(block_table[rows, page_idx], 0)
+            off = ci_v % ps
+            pos_q = jnp.broadcast_to(positions, (b, 1))
+            new_cache = {
+                "ckv_pages": cache["ckv_pages"].at[page_ids, off].set(
+                    ckv[:, 0].astype(cache["ckv_pages"].dtype)),
+                "krope_pages": cache["krope_pages"].at[page_ids, off].set(
+                    krope[:, 0].astype(cache["krope_pages"].dtype)),
+                "pos": cache["pos"].at[page_ids, off].set(
+                    pos_q[:, 0].astype(jnp.int32)),
+            }
+            ckv_g, krope_g, pos_g = MLA._gather_paged_latents(
+                new_cache, block_table)
+            out = MLA._absorbed_attention(
+                params, q, ckv_g, krope_g, pos_g, pos_q, cfg)
         else:
             # Absorbed-matrix decode (DeepSeek-V3 serving form): attention is
             # computed entirely in the compressed latent space, so the cache is

@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from typing import Optional
 
 import jax
@@ -118,8 +119,14 @@ class MoE:
     # -- routing ------------------------------------------------------------
 
     @staticmethod
-    def _route(logits, cfg: MoEConfig):
-        """logits (T, E) fp32 -> (top_w (T,k), top_ids (T,k), aux_loss)."""
+    def _route(logits, cfg: MoEConfig, row_mask=None):
+        """logits (T, E) fp32 -> (top_w (T,k), top_ids (T,k), aux_loss).
+
+        ``row_mask`` (T,) bool marks valid rows; load-balance statistics
+        are computed over valid rows only, so masked rows (chunked-decode
+        padding) contribute exactly zero — a fully-masked block yields
+        ``aux == 0.0``.
+        """
         if cfg.router_scoring == "sigmoid":
             scores = jax.nn.sigmoid(logits)
         else:
@@ -128,10 +135,18 @@ class MoE:
         top_w = top_w / (jnp.sum(top_w, axis=-1, keepdims=True) + 1e-9)
         # Switch-style load-balance auxiliary loss.
         probs = jax.nn.softmax(logits, axis=-1)
-        density = jnp.mean(
-            jax.nn.one_hot(top_ids, cfg.n_experts, dtype=jnp.float32),
-            axis=(0, 1))
-        density_proxy = jnp.mean(probs, axis=0)
+        if row_mask is None:
+            density = jnp.mean(
+                jax.nn.one_hot(top_ids, cfg.n_experts, dtype=jnp.float32),
+                axis=(0, 1))
+            density_proxy = jnp.mean(probs, axis=0)
+        else:
+            m = row_mask.astype(jnp.float32)                     # (T,)
+            n_valid = jnp.maximum(jnp.sum(m), 1.0)
+            one_hot = jax.nn.one_hot(top_ids, cfg.n_experts,
+                                     dtype=jnp.float32) * m[:, None, None]
+            density = jnp.sum(one_hot, axis=(0, 1)) / (n_valid * cfg.top_k)
+            density_proxy = jnp.sum(probs * m[:, None], axis=0) / n_valid
         aux = cfg.n_experts * jnp.sum(density * density_proxy)
         return top_w, top_ids, aux
 
@@ -139,41 +154,60 @@ class MoE:
 
     @staticmethod
     def apply(params, x, cfg: MoEConfig, mesh_info: MeshInfo = SINGLE, *,
-              mesh=None):
+              mesh=None, row_mask=None):
         """x: (B, L, D) -> (out (B, L, D), aux_loss scalar).
 
         When ``mesh`` is given, runs the shard_map expert-parallel path; the
         caller guarantees x is sharded P(batch_axes, None, model_axis).
+
+        ``row_mask`` (B, L) bool marks valid rows (chunked serving decode:
+        rows past a slot's ``chunk_lens`` or with no live lane are padding).
+        Masked rows are excluded from expert dispatch, capacity occupancy,
+        and the aux statistics; their routed-expert output is an exact zero
+        (the row-local shared expert still runs — harmless, rows are
+        independent and padding outputs are discarded by the caller).
         """
         b, l, d = x.shape
         mi = mesh_info
+        if mesh is not None and mesh.size == 1:
+            # Single-device smoke mesh: every collective is a no-op, so the
+            # unsharded block is the same computation without the shard_map
+            # machinery (which single-device serving should not depend on).
+            mesh = None
         if mesh is None:
             out, aux = MoE._apply_block(
                 {k: v for k, v in params.items() if k != "shared"},
-                x.reshape(b * l, d), cfg, SINGLE)
+                x.reshape(b * l, d), cfg, SINGLE,
+                None if row_mask is None else row_mask.reshape(b * l))
             out = out.reshape(b, l, d)
         else:
             specs = MoE.param_specs(cfg, mi)
             bat, seq = mi.bl_entries(b, l)
-            in_specs = ({k: specs[k] for k in params if k != "shared"},
-                        P(bat, seq, mi.model_axis))
+            in_specs = [{k: specs[k] for k in params if k != "shared"},
+                        P(bat, seq, mi.model_axis)]
+            operands = [{k: v for k, v in params.items() if k != "shared"},
+                        x]
+            if row_mask is not None:
+                in_specs.append(P(bat, seq))
+                operands.append(row_mask)
             out_specs = (P(bat, seq, mi.model_axis), P())
             fn = functools.partial(MoE._apply_shard, cfg=cfg, mi=mi)
             out, aux = jax.shard_map(
-                fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                check_vma=False)(
-                    {k: v for k, v in params.items() if k != "shared"}, x)
+                fn, mesh=mesh, in_specs=tuple(in_specs),
+                out_specs=out_specs, check_vma=False)(*operands)
         if "shared" in params:
             out = out + MLP.apply(params["shared"], x,
                                   activation=cfg.activation)
         return out, aux
 
     @staticmethod
-    def _apply_shard(local_params, x, *, cfg: MoEConfig, mi: MeshInfo):
+    def _apply_shard(local_params, x, row_mask=None, *, cfg: MoEConfig,
+                     mi: MeshInfo):
         """Per-device block inside shard_map.  x: (b_loc, L, d_loc)."""
         b, l, d_loc = x.shape
-        out, aux = MoE._apply_block(local_params, x.reshape(b * l, d_loc),
-                                    cfg, mi)
+        out, aux = MoE._apply_block(
+            local_params, x.reshape(b * l, d_loc), cfg, mi,
+            None if row_mask is None else row_mask.reshape(b * l))
         aux = jax.lax.pmean(aux, mi.data_axis)
         if MoE._use_ep2d(cfg, mi):
             aux = jax.lax.pmean(aux, mi.model_axis)
@@ -182,9 +216,18 @@ class MoE:
         return out.reshape(b, l, d_loc), aux
 
     @staticmethod
-    def _apply_block(local_params, x, cfg: MoEConfig, mi: MeshInfo):
+    def _apply_block(local_params, x, cfg: MoEConfig, mi: MeshInfo,
+                     row_mask=None):
         """Core EP block.  x: (T_loc, d_loc); expert weights are local slices
-        (E_loc, d_loc, F) / (E_loc, F, d_loc); router weight (d_loc, E)."""
+        (E_loc, d_loc, F) / (E_loc, F, d_loc); router weight (d_loc, E).
+
+        ``row_mask`` (T_loc,) bool marks rows that really exist (chunked
+        decode pads every slot to the compile-time chunk width; padding rows
+        carry garbage).  Masked rows are routed to a sentinel expert id
+        ``e_total`` so they never occupy a capacity slot, never appear in the
+        aux statistics, and come back as exact zeros — chunked MoE decode is
+        row-exact: valid rows see bit-identical routing whether or not
+        padding rows share the block."""
         t_loc, d_loc = x.shape
         ep2d = MoE._use_ep2d(cfg, mi)
         ep = mi.data_size * (mi.model_size if ep2d else 1)
@@ -203,21 +246,29 @@ class MoE:
         logits = x.astype(jnp.float32) @ local_params["router"]["w"]
         if mi.model_size > 1:
             logits = jax.lax.psum(logits, mi.model_axis)
-        top_w, top_ids, aux = MoE._route(logits, cfg)
+        top_w, top_ids, aux = MoE._route(logits, cfg, row_mask)
 
         # ---- sort-based dispatch to (E, C, d_loc) ---------------------------
-        cap = max(1, int((t_loc * k / e_total) * cfg.capacity_factor + 0.999))
+        # cap is a static python int (it sizes the dispatch buffer under
+        # jit); math.ceil, not int(x + 0.999) — the additive fudge
+        # under-allocates whenever frac(x) lands in (0.999, 1).
+        cap = max(1, math.ceil((t_loc * k / e_total) * cfg.capacity_factor))
         flat_e = top_ids.reshape(-1)                       # (T*k,)
+        if row_mask is not None:
+            # invalid rows -> sentinel expert id e_total: the stable sort
+            # pushes them past every real expert, so they cannot consume a
+            # capacity slot a valid row would otherwise get.
+            flat_e = jnp.where(jnp.repeat(row_mask, k), flat_e, e_total)
         flat_w = top_w.reshape(-1).astype(x.dtype)
         flat_t = jnp.arange(t_loc * k, dtype=jnp.int32) // k
         order = jnp.argsort(flat_e, stable=True)
         e_sorted = flat_e[order]
         t_sorted = flat_t[order]
         w_sorted = flat_w[order]
-        counts = jnp.bincount(flat_e, length=e_total)
+        counts = jnp.bincount(flat_e, length=e_total + 1)
         start = jnp.cumsum(counts) - counts
         pos = jnp.arange(t_loc * k, dtype=jnp.int32) - start[e_sorted]
-        keep = pos < cap
+        keep = (pos < cap) & (e_sorted < e_total)
         slot = jnp.where(keep, e_sorted * cap + pos, e_total * cap)
         buf = jnp.zeros((e_total * cap + 1, d_loc), x.dtype)
         buf = buf.at[slot].add(x[t_sorted])

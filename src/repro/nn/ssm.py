@@ -89,11 +89,16 @@ class Mamba:
     # -- full-sequence (train / prefill) --------------------------------------
 
     @staticmethod
-    def apply(params, x, cfg: MambaConfig, *, cache=None):
+    def apply(params, x, cfg: MambaConfig, *, cache=None, chunk_lens=None):
         """x: (B, L, D) -> (y, new_cache).
 
         cache given + L == 1: decode step.  cache given + L > 1: prefill —
-        full scan whose final state fills the cache."""
+        full scan whose final state fills the cache.  cache given +
+        ``chunk_lens`` (B,): chunked decode — L == C is a token chunk and
+        only rows ``i < chunk_lens[b]`` advance slot b's recurrent state
+        (``_chunked_decode``)."""
+        if cache is not None and chunk_lens is not None:
+            return Mamba._chunked_decode(params, x, cfg, cache, chunk_lens)
         if cache is not None and x.shape[1] == 1:
             return Mamba._decode_step(params, x, cfg, cache)
 
@@ -190,6 +195,51 @@ class Mamba:
         y = y.astype(x.dtype) * jax.nn.silu(z)
         y = Linear.apply(params["out_proj"], y)[:, None]
         return y, {"ssm": h, "conv": conv_hist[:, 1:]}
+
+    # -- chunked decode (serving.prefill_chunk > 1) -----------------------------
+
+    @staticmethod
+    def _chunked_decode(params, x, cfg: MambaConfig, cache, chunk_lens):
+        """Row-masked multi-token decode: scan the C chunk rows through the
+        single-step recurrence, gating both state updates (fp32 ssm state
+        and conv history) with the row's validity — an invalid row carries
+        the previous state forward untouched, so slot b's recurrent state
+        after the step is exactly what ``chunk_lens[b]`` sequential
+        single-token steps produce, while other slots' chunks ride the same
+        batched call.  Invalid rows still emit (garbage) outputs; the
+        caller's lane_mask zeroes their logits.
+        """
+        b, c, _ = x.shape
+        row_ok = jnp.arange(c)[None, :] < jnp.asarray(chunk_lens,
+                                                      jnp.int32)[:, None]
+        xz = Linear.apply(params["in_proj"], x)            # (B, C, 2di)
+        u_all, z_all = jnp.split(xz, 2, axis=-1)
+        w = params["conv_w"].astype(u_all.dtype)
+        a = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+        def step(carry, inp):
+            ssm, conv = carry
+            u_t, ok = inp                                  # (B, di), (B,)
+            conv_hist = jnp.concatenate([conv, u_t[:, None]], axis=1)
+            uc = jnp.einsum("bkd,kd->bd", conv_hist, w) + \
+                params["conv_b"].astype(u_t.dtype)
+            uc = jax.nn.silu(uc)
+            delta, bmat, cmat = Mamba._ssm_params(params, uc, cfg)
+            decay = jnp.exp(delta[..., None] * a)          # (B, di, ds)
+            drive = (delta * uc.astype(jnp.float32))[..., None] * \
+                bmat[:, None, :]
+            h = decay * ssm + drive
+            y = jnp.einsum("bds,bs->bd", h, cmat)
+            y = y + params["D"].astype(jnp.float32) * uc.astype(jnp.float32)
+            keep = ok[:, None, None]
+            return (jnp.where(keep, h, ssm),
+                    jnp.where(keep, conv_hist[:, 1:], conv)), y
+
+        (ssm, conv), ys = jax.lax.scan(
+            step, (cache["ssm"], cache["conv"]),
+            (u_all.transpose(1, 0, 2), row_ok.T))
+        y = ys.transpose(1, 0, 2).astype(x.dtype) * jax.nn.silu(z_all)
+        return Linear.apply(params["out_proj"], y), {"ssm": ssm, "conv": conv}
 
 
 # ---------------------------------------------------------------------------

@@ -70,15 +70,19 @@ class Engine:
         self.tracer = NULL_TRACER
         chunk = cfg.serving.prefill_chunk
         if chunk > 1:
-            # Chunked decode needs per-row write validity, which recurrent
-            # (SSM) state doesn't have, and C distinct ring slots per chunk.
+            # Chunked decode needs per-row write validity: attention caches
+            # mask row writes, MLA latents do the same, and Mamba gates its
+            # recurrence per row (``Mamba._chunked_decode``).  xLSTM state
+            # updates have no row-masked form yet.  Also C distinct ring
+            # slots per chunk.
             kinds = cfg.layer_kinds()
             bad = sorted({k["mixer"] for k in kinds
-                          if k["mixer"] not in ("attn", "mla")})
+                          if k["mixer"] in ("mlstm", "slstm")})
             if bad:
                 raise ValueError(
                     f"serving.prefill_chunk={chunk} unsupported with "
-                    f"{bad} mixers; set prefill_chunk=1")
+                    f"{bad} mixers (xLSTM has no row-masked state update); "
+                    f"set prefill_chunk=1")
             slots = min([self.max_len] +
                         [k["window"] for k in kinds if k["window"]])
             if chunk > slots:

@@ -76,9 +76,9 @@ def paged_cache_bytes(cfg: ModelConfig, batch: int, max_len: int, *,
                       pool_pages: int, page_size: int) -> int:
     """Bytes of the *paged* decode cache (``serving/paging.py``): eligible
     full-attention layers hold a shared ``pool_pages``-page pool (including
-    the reserved trash page); windowed rings, MLA latents, and SSM states
-    stay contiguous per slot.  Pinned to the allocator's actual pytree in
-    ``tests/test_kvcache.py``.
+    the reserved trash page) and MLA layers page their latent rows the same
+    way; windowed rings and SSM states stay contiguous per slot.  Pinned to
+    the allocator's actual pytree in ``tests/test_kvcache.py``.
 
     Pass the allocator's ``table.pages_in_use + 1`` as ``pool_pages`` to
     account pages actually allocated instead of ``batch * max_len``."""
@@ -86,10 +86,12 @@ def paged_cache_bytes(cfg: ModelConfig, batch: int, max_len: int, *,
     by = _dtype_bytes(cfg.dtype)
     total = 0
     for kind in cfg.layer_kinds():
-        if kind["mixer"] == "attn" and paged_eligible(kind["window"],
-                                                      max_len):
+        eligible = paged_eligible(kind["window"], max_len)
+        if kind["mixer"] == "attn" and eligible:
             total += pool_pages * page_size * (
                 cfg.n_kv_heads * cfg.head_dim_ * 2 * by + 4)
+        elif kind["mixer"] == "mla" and eligible:
+            total += pool_pages * page_size * (cfg.mla.cache_width * by + 4)
         else:
             total += _contiguous_layer_bytes(cfg, kind, batch, max_len)
     return total + _cross_kv_bytes(cfg, batch)

@@ -7,9 +7,10 @@ This module pages the position axis instead (vLLM-style, applied to
 DataMUX's N-streams-per-slot cache):
 
   * the pool: every eligible attention layer holds ``pool_pages`` pages of
-    ``page_size`` positions (``Attention.init_paged_cache``); page 0 is a
-    reserved trash page — writes from emptied slots land there and no block
-    table ever references it;
+    ``page_size`` positions (``Attention.init_paged_cache``), and MLA
+    layers page their (r + rope)-wide latent rows the same way
+    (``MLA.init_paged_cache``); page 0 is a reserved trash page — writes
+    from emptied slots land there and no block table ever references it;
   * the ``PageTable``: host-side free list + per-slot page rows.  A slot's
     page row is identical across layers (same positions everywhere), so one
     (B, max_pages) device block table serves the whole pytree;
@@ -22,9 +23,9 @@ DataMUX's N-streams-per-slot cache):
     are lazily invalidated (pos ← -1) when next allocated, so recycling
     never touches pages that are not about to be reused.
 
-Ineligible layers (windowed ring buffers, MLA latents, SSM states — all
-O(window) or O(1) per slot) keep their contiguous per-slot caches and reset
-through the same masked-restore the contiguous allocator uses.
+Ineligible layers (windowed ring buffers, SSM states — all O(window) or
+O(1) per slot) keep their contiguous per-slot caches and reset through the
+same masked-restore the contiguous allocator uses.
 
 Admission economics: the scheduler sizes requests in pages
 (``pages_for``) against ``usable_pages`` instead of slot depth, so a
@@ -209,7 +210,8 @@ class PagedKVSlotAllocator:
             "tail": kinds[head + period * groups:],
         }
         self._paged = {
-            sec: [k["mixer"] == "attn" and paged_eligible(k["window"], max_len)
+            sec: [k["mixer"] in ("attn", "mla") and
+                  paged_eligible(k["window"], max_len)
                   for k in sec_kinds]
             for sec, sec_kinds in by_section.items()}
 
@@ -321,8 +323,13 @@ class PagedKVSlotAllocator:
                 continue
             tmpl = template[sec][i]
             ch = {}
-            for pool_key, tmpl_key in (("k_pages", "k"), ("v_pages", "v"),
-                                       ("pos", "pos")):
+            # Pool keys name their contiguous-template twin by suffix:
+            # k_pages/v_pages/ckv_pages/krope_pages <- k/v/ckv/krope; the
+            # shared "pos" maps to itself.  Keeps this import generic over
+            # GQA K/V pools and MLA latent pools alike.
+            for pool_key in layer:
+                tmpl_key = pool_key[:-len("_pages")] \
+                    if pool_key.endswith("_pages") else pool_key
                 src = tmpl[tmpl_key]            # (B, S, ...) or (G, B, S, ...)
                 pool = layer[pool_key]          # (P, ps, ...) or (G, P, ps, ...)
                 seq_ax = axis + 1               # position axis of the template
@@ -356,7 +363,7 @@ class PagedKVSlotAllocator:
             if key not in chunks:
                 continue
             new_layer = dict(layer)
-            for pool_key in ("k_pages", "v_pages", "pos"):
+            for pool_key in layer:
                 pool = layer[pool_key]
                 chunk = chunks[key][pool_key]
                 if axis == 0:                   # head/tail: pool axis 0
@@ -377,7 +384,7 @@ class PagedKVSlotAllocator:
             if not paged or key not in chunks:
                 continue
             new_layer = dict(layer)
-            for pool_key in ("k_pages", "v_pages", "pos"):
+            for pool_key in layer:
                 pool = layer[pool_key]
                 ch = jax.lax.dynamic_index_in_dim(
                     chunks[key][pool_key], slot, axis=axis, keepdims=False)

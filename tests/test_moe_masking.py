@@ -1,0 +1,159 @@
+"""Row-masked MoE dispatch (ISSUE 9 tentpole): padding rows in a chunked
+decode block must be invisible to routing — no capacity slot, no aux-loss
+contribution, exact-zero routed output — and the unmasked path must stay
+bitwise what it always was.
+
+Also pins the expert-capacity rounding fix: ``cap`` is ``math.ceil``, not
+the old ``int(x + 0.999)`` fudge, which under-allocated one slot whenever
+the fractional part of ``T*k/E * capacity_factor`` landed in (0, 0.001).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn.moe import MoE, MoEConfig
+
+DIM = 16
+
+
+def _cfg(**kw):
+    base = dict(dim=DIM, moe_ff=8, n_experts=2, top_k=1,
+                capacity_factor=1.0, gated=True)
+    base.update(kw)
+    return MoEConfig(**base)
+
+
+def _params_favoring_expert0(cfg, key=0):
+    """Router steered so every token picks expert 0 (capacity tests need a
+    deterministic hot expert).  Pair with positive inputs: expert 0's logit
+    is sum(x) > 0, every other expert's is 0."""
+    params = MoE.init(jax.random.PRNGKey(key), cfg)
+    w = np.zeros((cfg.dim, cfg.n_experts), np.float32)
+    w[:, 0] = 1.0
+    params["router"]["w"] = jnp.asarray(w)
+    return params
+
+
+def _positive_x(rng, shape):
+    return jnp.asarray(np.abs(rng.normal(size=shape)) + 0.1, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Capacity rounding
+# ---------------------------------------------------------------------------
+
+def test_capacity_ceil_boundary():
+    """T*k/E * cf = 8.0005: ceil gives 9 slots; the old int(x + 0.999)
+    fudge gave int(8.9995) = 8 and silently dropped a token the config's
+    capacity factor had paid for.  All 16 tokens route to expert 0, so the
+    number of non-dropped (nonzero-output) rows IS the capacity."""
+    cfg = _cfg(n_experts=2, top_k=1, capacity_factor=1.0000625)
+    params = _params_favoring_expert0(cfg)
+    x = _positive_x(np.random.default_rng(0), (1, 16, DIM))
+    out, _ = MoE.apply(params, x, cfg)
+    kept = int(np.sum(np.abs(np.asarray(out[0])).max(axis=-1) > 0))
+    assert kept == 9, f"cap rounding regressed: {kept} rows kept, want 9"
+
+
+# ---------------------------------------------------------------------------
+# Row masking
+# ---------------------------------------------------------------------------
+
+def test_all_true_mask_is_noop_bitwise():
+    cfg = _cfg(n_experts=4, top_k=2, capacity_factor=1.25)
+    params = MoE.init(jax.random.PRNGKey(1), cfg)
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(2, 8, DIM)),
+                    jnp.float32)
+    out_none, aux_none = MoE.apply(params, x, cfg)
+    out_mask, aux_mask = MoE.apply(params, x, cfg,
+                                   row_mask=jnp.ones((2, 8), bool))
+    np.testing.assert_array_equal(np.asarray(out_none), np.asarray(out_mask))
+    np.testing.assert_array_equal(np.asarray(aux_none), np.asarray(aux_mask))
+
+
+def test_fully_masked_block_zero_aux_and_zero_output():
+    """A block of nothing but padding (a drained chunked-decode step)
+    contributes exactly 0.0 aux loss and exact-zero routed outputs —
+    not a mean over garbage logits."""
+    cfg = _cfg(n_experts=4, top_k=2)
+    params = MoE.init(jax.random.PRNGKey(2), cfg)
+    x = jnp.asarray(np.random.default_rng(2).normal(size=(1, 6, DIM)) * 50,
+                    jnp.float32)
+    out, aux = MoE.apply(params, x, cfg, row_mask=jnp.zeros((1, 6), bool))
+    assert float(aux) == 0.0
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+def test_masked_rows_do_not_steal_capacity():
+    """Tight capacity (cap == number of valid rows), garbage rows ahead of
+    the valid rows in dispatch order, everyone wanting expert 0.  Without
+    the mask the garbage occupies every slot and the valid rows drop; with
+    the mask every valid row keeps its slot."""
+    cfg = _cfg(n_experts=2, top_k=1, capacity_factor=1.0)   # cap = 4 of 8
+    params = _params_favoring_expert0(cfg, key=3)
+    x = _positive_x(np.random.default_rng(3), (1, 8, DIM))
+    mask = jnp.asarray([[False] * 4 + [True] * 4])
+    out_unmasked, _ = MoE.apply(params, x, cfg)
+    out_masked, _ = MoE.apply(params, x, cfg, row_mask=mask)
+    # unmasked: garbage rows 0-3 grabbed the 4 slots, valid rows dropped
+    dropped = np.abs(np.asarray(out_unmasked[0, 4:])).max(axis=-1)
+    np.testing.assert_array_equal(dropped, 0.0)
+    # masked: every valid row kept, every garbage row exact zero
+    kept = np.abs(np.asarray(out_masked[0, 4:])).max(axis=-1)
+    assert (kept > 0).all()
+    np.testing.assert_array_equal(np.abs(np.asarray(out_masked[0, :4])), 0.0)
+
+
+def test_valid_rows_invariant_to_padding_content():
+    """Row-exactness: the valid rows' outputs and the aux loss are bitwise
+    identical no matter what garbage the padding rows hold."""
+    cfg = _cfg(n_experts=4, top_k=2, capacity_factor=1.25)
+    params = MoE.init(jax.random.PRNGKey(4), cfg)
+    rng = np.random.default_rng(4)
+    base = rng.normal(size=(2, 6, DIM)).astype(np.float32)
+    mask = np.ones((2, 6), bool)
+    mask[0, 4:] = False
+    mask[1, 2:] = False
+    other = base.copy()
+    other[~mask] = rng.normal(size=(~mask).sum() * DIM).reshape(-1, DIM) * 9.
+    out_a, aux_a = MoE.apply(params, jnp.asarray(base), cfg,
+                             row_mask=jnp.asarray(mask))
+    out_b, aux_b = MoE.apply(params, jnp.asarray(other), cfg,
+                             row_mask=jnp.asarray(mask))
+    np.testing.assert_array_equal(np.asarray(out_a)[mask],
+                                  np.asarray(out_b)[mask])
+    np.testing.assert_array_equal(np.asarray(aux_a), np.asarray(aux_b))
+    # padding rows: routed output is an exact zero either way
+    np.testing.assert_array_equal(np.abs(np.asarray(out_a))[~mask], 0.0)
+
+
+def test_masked_aux_matches_compact_block():
+    """Aux loss over (valid rows + padding, masked) equals the aux of the
+    same valid rows run alone — allclose, not bitwise: the reduction order
+    over rows differs (masked sum vs unpadded mean)."""
+    cfg = _cfg(n_experts=4, top_k=2, capacity_factor=8.0)
+    params = MoE.init(jax.random.PRNGKey(5), cfg)
+    rng = np.random.default_rng(5)
+    valid = rng.normal(size=(1, 5, DIM)).astype(np.float32)
+    padded = np.concatenate(
+        [valid, rng.normal(size=(1, 3, DIM)).astype(np.float32)], axis=1)
+    mask = np.asarray([[True] * 5 + [False] * 3])
+    _, aux_masked = MoE.apply(params, jnp.asarray(padded), cfg,
+                              row_mask=jnp.asarray(mask))
+    _, aux_alone = MoE.apply(params, jnp.asarray(valid), cfg)
+    np.testing.assert_allclose(float(aux_masked), float(aux_alone),
+                               rtol=1e-6)
+
+
+def test_shared_expert_runs_on_masked_rows():
+    """The shared expert is row-local, so it still runs on padding rows
+    (their outputs are discarded downstream) — only the *routed* part is
+    forced to zero.  Pins the documented contract."""
+    cfg = _cfg(n_experts=2, top_k=1, n_shared_experts=1)
+    params = MoE.init(jax.random.PRNGKey(6), cfg)
+    x = jnp.asarray(np.random.default_rng(6).normal(size=(1, 4, DIM)),
+                    jnp.float32)
+    out, _ = MoE.apply(params, x, cfg, row_mask=jnp.zeros((1, 4), bool))
+    from repro.nn.layers import MLP
+    shared = MLP.apply(params["shared"], x, activation=cfg.activation)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(shared))

@@ -296,6 +296,111 @@ def test_fuse_demux_contiguous_serving(key):
            {q.rid: q.output for q in s_f.finished}
 
 
+# ---------------------------------------------------------------------------
+# Paged MLA latents (ISSUE 9): (r + rope) latent rows page like K/V
+# ---------------------------------------------------------------------------
+
+def _mla_cfg(n=2, **serving):
+    cfg = get_smoke_config("deepseek-v3-671b", mux_n=n)
+    if serving:
+        cfg = dataclasses.replace(cfg, serving=ServingConfig(**serving))
+    return cfg
+
+
+def test_mla_latent_layers_are_paged():
+    """Every deepseek layer is MLA with no window, so paged eligibility is
+    total: the allocator pools ckv/krope latent rows, keeps no contiguous
+    layers, and parks without a contiguous snapshot."""
+    cfg = _mla_cfg(paged=True, page_size=8)
+    alloc = PagedKVSlotAllocator(cfg, 2, 32)
+    assert all(f for flags in alloc._paged.values() for f in flags)
+    assert not alloc._has_contiguous
+    for sec in ("head", "tail", "blocks"):
+        for layer in alloc.cache[sec]:
+            assert set(layer) == {"ckv_pages", "krope_pages", "pos"}
+    park = alloc.park_slot(0)
+    assert park.snapshot is None
+    alloc.resume_slot(0, park)
+
+
+def test_mla_paged_decode_matches_contiguous_bitwise(key):
+    """Step-level: the gathered (page, offset) latent row IS the contiguous
+    position row, masked pool entries contribute exact zeros to the
+    absorbed-matrix softmax — deepseek decode logits bit-for-bit."""
+    cfg = _mla_cfg()
+    params = Backbone.init(key, cfg)
+    B, n = 2, cfg.mux.n
+    cfg_p = _mla_cfg(paged=True, page_size=8)
+    eng_c = Engine(params, cfg, batch=B, max_len=30)
+    eng_p = Engine(params, cfg_p, batch=B, max_len=30)
+
+    primed_c = eng_c.prime()
+    alloc_c = KVSlotAllocator(cfg, B, eng_c.max_len, template=primed_c.cache)
+    primed_p = eng_p.prime()
+    alloc_p = PagedKVSlotAllocator(cfg_p, B, eng_p.max_len,
+                                   template=primed_p.cache)
+
+    ones = jnp.ones((B, n), jnp.float32)
+    pos = np.asarray(primed_c.pos).copy()
+    toks = jax.random.randint(key, (B, n), 0, cfg.vocab)
+    for _ in range(6):
+        st_c = ServeState(cache=alloc_c.cache, pos=jnp.asarray(pos),
+                          index_embeds=primed_c.index_embeds)
+        la, st_c = eng_c.step(st_c, toks, lane_mask=ones)
+        alloc_c.adopt(st_c.cache)
+
+        alloc_p.ensure(pos, np.ones(B, bool))
+        st_p = ServeState(cache=alloc_p.cache, pos=jnp.asarray(pos),
+                          index_embeds=primed_p.index_embeds)
+        lb, st_p = eng_p.step(st_p, toks, lane_mask=ones,
+                              block_table=alloc_p.block_table)
+        alloc_p.adopt(st_p.cache)
+
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+        toks = jnp.argmax(la, axis=-1)
+        pos += 1
+
+
+@pytest.mark.parametrize("chunk", [1, 4])
+def test_mla_paged_scheduler_matches_contiguous(key, chunk):
+    """Trace-level, both ramp widths: the paged deepseek scheduler (MLA
+    latents pooled, MoE row-masked at chunk > 1) reproduces the contiguous
+    scheduler token-for-token.  Same chunk on both sides, so MoE capacity
+    competition is identical and the comparison is exact even with a
+    binding capacity factor."""
+    cfg = _mla_cfg(prefill_chunk=chunk)
+    params = Backbone.init(key, cfg)
+    base = _requests([(3, 0), (5, 0), (2, 1), (4, 2)],
+                     vocab=cfg.vocab)
+
+    s_c = ContinuousScheduler(Engine(params, cfg, batch=2, max_len=30))
+    st_c = s_c.run(_fresh(base))
+    cfg_p = _mla_cfg(paged=True, page_size=8, prefill_chunk=chunk)
+    s_p = ContinuousScheduler(Engine(params, cfg_p, batch=2, max_len=30))
+    st_p = s_p.run(_fresh(base))
+
+    assert st_c.decode_steps == st_p.decode_steps
+    assert st_c.finished == st_p.finished == len(base)
+    assert ({q.rid: q.output for q in s_c.finished} ==
+            {q.rid: q.output for q in s_p.finished})
+
+
+def test_mla_no_page_leak_after_trace_drains(key):
+    """Latent pages recycle exactly like K/V pages: after the deepseek
+    trace drains only the resident prefix pages stay mapped."""
+    cfg = _mla_cfg(paged=True, page_size=4)
+    params = Backbone.init(key, cfg)
+    sched = ContinuousScheduler(Engine(params, cfg, batch=2, max_len=30))
+    stats = sched.run(_requests([(3, 0), (6, 0), (2, 1), (4, 3)],
+                                vocab=cfg.vocab))
+    assert stats.finished == 4
+    table = sched.allocator.table
+    keep = sched.allocator.n_prefix_pages * sched.n_slots
+    assert table.pages_in_use == keep
+    assert table.free_pages == table.usable_pages - keep
+    assert stats.peak_pages > keep
+
+
 def test_kblock_config_validation_fails_fast():
     """An over-budget kblock_pages x page_size x head_dim claim raises at
     config construction with the knob to turn — not inside lowering."""

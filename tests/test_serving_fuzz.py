@@ -21,13 +21,17 @@ interleaving of arrivals, ramps, chunk widths, priorities, and retirements:
   * telemetry lifecycle (PR 8): with a ``Tracer`` attached, every admitted
     rid opens and closes exactly one submit→admit→retire span, no span
     survives the drain, and preempt/resume events pair and nest correctly
-    (``Tracer.lifecycle_errors`` re-checks the full event stream).
+    (``Tracer.lifecycle_errors`` re-checks the full event stream);
+  * MLA + MoE serving (ISSUE 9): the same trace/page/preemption invariants
+    hold on a deepseek-style backbone — paged MLA latent pools, row-masked
+    MoE dispatch at chunk > 1 — not just the dense-attention one.
 
 Runs with real ``hypothesis`` when installed (CI) and with the
 deterministic stub in ``conftest.py`` otherwise — both draw from the
 ``integers`` strategy only.
 """
 import dataclasses
+import functools
 
 import jax
 import numpy as np
@@ -36,6 +40,7 @@ from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.configs.base import ModelConfig, MuxConfig, ServingConfig
+from repro.configs.registry import get_smoke_config
 from repro.models import Backbone
 from repro.serving.engine import Engine
 from repro.serving.scheduler import ContinuousScheduler, Request
@@ -218,6 +223,67 @@ def test_fuzz_preempt_resume_invariants(seed, chunk):
     assert sched_p.stats.preemptions == sched_c.stats.preemptions
 
     # no page leak after drain: parked rows returned, prefix pages resident
+    table = sched_p.allocator.table
+    keep = sched_p.allocator.n_prefix_pages * N_SLOTS
+    assert table.pages_in_use == keep
+    assert table.free_pages == table.usable_pages - keep
+
+
+@functools.lru_cache(maxsize=None)
+def _mla_setup():
+    """Deepseek-style smoke backbone: every mixer MLA (latents paged),
+    every other MLP MoE (row-masked dispatch at chunk > 1)."""
+    cfg = get_smoke_config("deepseek-v3-671b", mux_n=2)
+    return cfg, Backbone.init(jax.random.PRNGKey(1), cfg)
+
+
+@settings(max_examples=2, deadline=None, derandomize=True)
+@given(seed=st.integers(0, 10_000), chunk=st.integers(1, 3))
+def test_fuzz_mla_moe_preempt_resume_invariants(seed, chunk):
+    """ISSUE 9 sweep: random two-class preempting traces on the MLA + MoE
+    backbone.  Page conservation holds every step over the latent pools,
+    parked latent rows survive park/resume losslessly (paged == contiguous
+    token-for-token), the telemetry lifecycle stays clean, and zero pages
+    leak after the drain."""
+    cfg0, params = _mla_setup()
+    rng = np.random.default_rng(seed)
+    vocab = cfg0.vocab
+    trace = [Request(
+        rid=i,
+        prompt=rng.integers(0, vocab,
+                            int(rng.integers(1, 5))).astype(np.int32),
+        max_new_tokens=int(rng.integers(1, 6)),
+        arrival=int(a), priority=int(rng.integers(0, 4)),
+        slo="latency" if rng.random() < 0.4 else "batch",
+    ) for i, a in enumerate(np.cumsum(rng.integers(0, 3, 5)))]
+    max_len = cfg0.mux.prefix_len + 4 * (4 + 5)
+    page_size = 4
+    from repro.serving.paging import pages_for
+    pool = 2 * N_SLOTS * pages_for(max_len, page_size) + 1
+
+    def build(paged, tracer):
+        serving = ServingConfig(paged=paged, page_size=page_size,
+                                pool_pages=pool if paged else 0,
+                                prefill_chunk=chunk, policy="slo",
+                                preempt=True)
+        cfg = dataclasses.replace(cfg0, serving=serving)
+        eng = Engine(params, cfg, batch=N_SLOTS, max_len=max_len)
+        return ContinuousScheduler(eng, tracer=tracer)
+
+    tr_c, tr_p = Tracer(), Tracer()
+    sched_c = build(paged=False, tracer=tr_c)
+    out_c = _drive(sched_c, [r.fresh() for r in trace])
+    sched_p = build(paged=True, tracer=tr_p)
+    out_p = _drive(sched_p, [r.fresh() for r in trace])
+
+    assert tr_c.lifecycle_errors() == []
+    assert tr_p.lifecycle_errors() == []
+    for r in trace:
+        assert len(out_c[r.rid]) == r.max_new_tokens
+    assert out_c == out_p
+    assert sched_p.stats.preemptions == sched_p.stats.resumes
+
+    # zero page leaks across preempt/resume with MLA latents paged
     table = sched_p.allocator.table
     keep = sched_p.allocator.n_prefix_pages * N_SLOTS
     assert table.pages_in_use == keep
