@@ -28,7 +28,7 @@ from benchmarks import (common, decode_kernel, heads_ablation, image_mux,
                         index_variance, memory_overhead, mux_strategies,
                         paging, retrieval_acc, roofline, router,
                         serving_moe, small_models, task_acc_vs_n,
-                        throughput_vs_n)
+                        throughput_vs_n, width_classes)
 
 SUITES = {
     "fig3": task_acc_vs_n.run,        # task acc vs N
@@ -47,6 +47,7 @@ SUITES = {
     "router": router.run,             # replica-router scaling R=1,2,4
     "decode_kernel": decode_kernel.run,  # K-block grid + fused demux
     "moe": serving_moe.run,           # MoE + MLA chunked/paged serving
+    "width_classes": width_classes.run,  # {1,N} width pool vs fixed fleets
 }
 
 # Keys ``--check`` compares.  Only scheduler-determined counts qualify: the

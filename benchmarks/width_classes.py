@@ -1,0 +1,155 @@
+"""Beyond-paper serving benchmark: adaptive multiplexing width classes.
+
+One SLO-mixed Poisson trace replayed through three fleets of the same
+backbone family: a fixed N=1 fleet (every lane solo — the latency
+gold standard, worst throughput), a fixed N=4 fleet (every lane muxed
+— best throughput, muxed TTFT), and a {1, 4} width-class pool under
+the ``slo_tiered`` policy (latency requests ride the narrow slots,
+batch requests the wide ones, each class on its own compiled engine
+variant over shared weights).
+
+Two built-in checks mirror the acceptance criteria:
+
+  * ``width_set={N}`` — one class at the native width spanning the
+    whole batch — reproduces the fixed-N scheduler token stream
+    bitwise with zero extra variant compiles;
+  * the mixed pool serves the latency class with mean TTFT <= the N=1
+    fleet while sustaining >= 1.5x its total tok/step.
+
+Writes ``results/bench/width_classes.json`` (the ``width_classes``
+suite of ``benchmarks.run``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.configs.base import ServingConfig
+from repro.models import Backbone
+from repro.serving.engine import Engine
+from repro.serving.scheduler import ContinuousScheduler, poisson_trace
+from repro.serving.telemetry import Tracer
+
+
+def _fresh(reqs):
+    return [r.fresh() for r in reqs]
+
+
+def _latency_ttft_mean(sched) -> float:
+    tt = [r.ttft for r in sched.finished
+          if r.slo == "latency" and r.ttft >= 0]
+    return float(np.mean(tt)) if tt else -1.0
+
+
+def run(*, n=4, batch=8, num_requests=64, rate=8.0, prompt_len=3,
+        gen_len=5, slo_mix=0.25, seed=0):
+    common.banner("Serving — adaptive mux width classes ({1,4} vs fixed-N)")
+    serving = ServingConfig(policy="slo")
+    cfg1 = common.micro_config(1, serving=serving)
+    cfg4 = common.micro_config(n, serving=serving)
+    cfg_mixed = dataclasses.replace(cfg4, serving=dataclasses.replace(
+        serving, width_set=(1, n), width_policy="slo_tiered"))
+    params1 = Backbone.init(jax.random.PRNGKey(0), cfg1)
+    params4 = Backbone.init(jax.random.PRNGKey(0), cfg4)
+    max_total = 2 * prompt_len + 4 * gen_len + 1
+    # Work-bound two-class trace: arrivals fast enough that every fleet
+    # queues deeply, so lane topology (not arrival gaps) sets TTFT.
+    trace = poisson_trace(num_requests, rate=rate, prompt_len=prompt_len,
+                          gen_len=gen_len, vocab=cfg4.vocab,
+                          max_total=max_total, seed=seed, slo_mix=slo_mix)
+
+    # Bitwise check: width_set={N} spanning the whole batch is the fixed-N
+    # scheduler — same decisions, same tokens, no extra compiles.
+    sched_fix = ContinuousScheduler(
+        Engine(params4, cfg4, batch=batch, max_len=max_total))
+    fix_stats = sched_fix.run(_fresh(trace))
+    cfg_single = dataclasses.replace(cfg4, serving=dataclasses.replace(
+        serving, width_set=(n,)))
+    eng_single = Engine(params4, cfg_single, batch=batch, max_len=max_total)
+    sched_single = ContinuousScheduler(eng_single)
+    single_stats = sched_single.run(_fresh(trace))
+    fixed = {q.rid: list(q.output) for q in sched_fix.finished}
+    single = {q.rid: list(q.output) for q in sched_single.finished}
+    bitwise = (single == fixed
+               and single_stats.decode_steps == fix_stats.decode_steps)
+    assert bitwise, "width_set={N} diverged from the fixed-N scheduler"
+    assert eng_single.variant_compiles == 0, \
+        "native singleton class recompiled the engine"
+    print(f"  width_set={{{n}}} vs fixed N={n}: bitwise-identical "
+          f"({fix_stats.decode_steps} steps, "
+          f"{fix_stats.generated_tokens} tokens, 0 variant compiles)")
+
+    payload = {
+        "config": {"n": n, "batch": batch, "num_requests": num_requests,
+                   "rate": rate, "prompt_len": prompt_len,
+                   "gen_len": gen_len, "slo_mix": slo_mix, "seed": seed,
+                   "arch": cfg4.name},
+        "bitwise_single_class_vs_fixed": bitwise,
+        "fleets": {},
+    }
+
+    def fleet(label, cfg, params, tracer=None):
+        eng = Engine(params, cfg, batch=batch, max_len=max_total)
+        sched = ContinuousScheduler(eng, tracer=tracer)
+        t0 = time.time()
+        stats = sched.run(_fresh(trace))
+        dt = time.time() - t0
+        assert stats.finished == num_requests, \
+            f"{label}: finished {stats.finished}/{num_requests}"
+        lanes = sum(c.width * c.n_slots for c in sched.classes)
+        rec = {
+            "lanes": lanes,
+            "decode_steps": stats.decode_steps,
+            "generated_tokens": stats.generated_tokens,
+            "tok_per_step": round(
+                stats.generated_tokens / max(1, stats.decode_steps), 3),
+            "tok_per_s_wall": round(
+                stats.generated_tokens / max(dt, 1e-9), 1),
+            "ttft": {"p50": round(stats.ttft_p50, 1),
+                     "p99": round(stats.ttft_p99, 1)},
+            "latency_ttft_mean": round(_latency_ttft_mean(sched), 2),
+            "variant_compiles": eng.variant_compiles,
+        }
+        if stats.per_width:
+            rec["per_width"] = {str(w): {k: (round(v, 2)
+                                             if isinstance(v, float) else v)
+                                         for k, v in d.items()}
+                                for w, d in stats.per_width.items()}
+        if tracer is not None:
+            rec["telemetry"] = common.telemetry_summary(tracer)
+        payload["fleets"][label] = rec
+        print(f"  {label:7s}: {lanes:2d} lanes, {stats.decode_steps} steps, "
+              f"{stats.generated_tokens} tokens "
+              f"({rec['tok_per_step']} tok/step), ttft p50 "
+              f"{stats.ttft_p50:.1f}, latency-class mean "
+              f"{rec['latency_ttft_mean']:.1f}, "
+              f"{eng.variant_compiles} variant compiles")
+        return rec
+
+    n1 = fleet("n1", cfg1, params1)
+    fleet(f"n{n}", cfg4, params4)
+    mixed = fleet("mixed", cfg_mixed, params4, tracer=Tracer())
+
+    # Acceptance gates: the mixed pool must dominate the N=1 fleet — at
+    # least its latency (narrow slots reserved for the latency class) AND
+    # >= 1.5x its throughput (wide slots soak the batch class).
+    assert mixed["latency_ttft_mean"] <= n1["latency_ttft_mean"], \
+        (f"mixed latency-class mean TTFT {mixed['latency_ttft_mean']} "
+         f"worse than the N=1 fleet's {n1['latency_ttft_mean']}")
+    speedup = mixed["tok_per_step"] / max(1e-9, n1["tok_per_step"])
+    payload["throughput_mixed_over_n1"] = round(speedup, 3)
+    assert speedup >= 1.5, \
+        f"mixed pool sustained only {speedup:.2f}x the N=1 tok/step (< 1.5x)"
+    print(f"  mixed vs n1: latency-class mean TTFT "
+          f"{mixed['latency_ttft_mean']:.1f} <= {n1['latency_ttft_mean']:.1f}"
+          f", throughput {speedup:.2f}x (threshold 1.5x)")
+    common.save("width_classes", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -158,6 +158,28 @@ class ServingConfig:
                               # (lock-step, the SPMD execution shape); False:
                               # only replicas with live/queued/parked work
                               # step, idle replicas skip (independent).
+    width_set: tuple = ()     # adaptive mux width: widths (e.g. (1, 4, 8))
+                              # partitioning the B slots into width classes,
+                              # each served by its own compiled engine
+                              # variant (narrowed mux/demux params, own
+                              # KV/page template).  Every member must
+                              # satisfy the active mux strategy's width
+                              # constraints and be <= mux.n (validated at
+                              # ModelConfig construction).  () = one class
+                              # at the model's native width, bit-for-bit
+                              # today's fixed-N scheduler.
+    width_policy: str = "static"
+                              # width-class selection at admission
+                              # (serving/policies.py WidthPolicy registry):
+                              # static | slo_tiered | load_adaptive, or any
+                              # registered custom policy.  Only meaningful
+                              # with len(width_set) > 1.
+    max_preemptions: int = 0  # per-request preemption cap: a request
+                              # preempted this many times becomes
+                              # eviction-immune (complements
+                              # min_residency_steps — residency shields
+                              # *recent* work, the cap shields *churned*
+                              # work).  0 = uncapped (today's behaviour).
 
     def __post_init__(self):
         if self.page_size < 1:
@@ -183,6 +205,23 @@ class ServingConfig:
             raise ValueError(
                 f"router_policy must be a registered routing-policy name, "
                 f"got {self.router_policy!r}")
+        if self.max_preemptions < 0:
+            raise ValueError(f"max_preemptions must be >= 0, got "
+                             f"{self.max_preemptions}")
+        widths = tuple(self.width_set)
+        for w in widths:
+            if not isinstance(w, int) or isinstance(w, bool) or w < 1:
+                raise ValueError(
+                    f"width_set members must be ints >= 1, got {w!r} in "
+                    f"{widths}")
+        if len(set(widths)) != len(widths):
+            raise ValueError(f"duplicate widths in width_set {widths}")
+        # Normalised ascending: class layout and policy ordering key off it.
+        object.__setattr__(self, "width_set", tuple(sorted(widths)))
+        if not self.width_policy or not isinstance(self.width_policy, str):
+            raise ValueError(
+                f"width_policy must be a registered width-policy name, got "
+                f"{self.width_policy!r}")
         if not self.slo_classes:
             raise ValueError("slo_classes needs at least one (name, "
                              "deadline) pair")
@@ -265,6 +304,29 @@ class ModelConfig:
             from repro.core import strategies
             strategies.get_mux(self.mux.strategy).validate(
                 self.mux, self.d_model)
+        # Width-class cross-check (serving.width_set x mux strategy): every
+        # class width must be a valid mux width for this model *now*, not at
+        # the first jitted apply of a lazily compiled variant mid-serve.
+        if self.serving.width_set:
+            from repro.core import strategies
+            for w in self.serving.width_set:
+                if w > self.mux.n:
+                    raise ValueError(
+                        f"width_set member {w} exceeds the model's native "
+                        f"mux width n={self.mux.n}: engine variants narrow "
+                        f"the native mux/demux params, so every class width "
+                        f"must satisfy 1 <= w <= n (got width_set="
+                        f"{self.serving.width_set})")
+                if w > 1:
+                    try:
+                        strategies.get_mux(self.mux.strategy).validate(
+                            dataclasses.replace(self.mux, n=w), self.d_model)
+                    except ValueError as e:
+                        raise ValueError(
+                            f"width_set member {w} violates mux strategy "
+                            f"{self.mux.strategy!r} constraints at d_model="
+                            f"{self.d_model}: {e}  Drop {w} from width_set "
+                            f"or pick a compatible width.") from e
         # A K-block that can never fit VMEM fails here with the knob to
         # turn, not inside Mosaic lowering mid-serve.  Only the Pallas
         # kernel assembles K-blocks; the jnp ref is layout-free.

@@ -55,6 +55,17 @@ class MuxStrategy:
         """Raise ValueError if the strategy cannot run at width ``d``."""
         del cfg, d
 
+    def narrow(self, params, cfg, w: int):
+        """Params for serving the same model at mux width ``w`` <= cfg.n
+        (adaptive-width engine variants).  The contract is *consistency*,
+        not fresh-init equivalence: the narrowed mux must pair with the
+        narrowed demux so a width-``w`` slot round-trips its lanes.  The
+        base class passes params through — correct for parameter-free and
+        width-independent strategies; per-index strategies slice their
+        leading N axis."""
+        del cfg, w
+        return params
+
     # -- forward --------------------------------------------------------------
 
     def transform(self, params, x, cfg):
@@ -101,6 +112,12 @@ class DemuxStrategy:
 
     def init(self, key, cfg, d: int, *, param_dtype=jnp.float32) -> dict:
         raise NotImplementedError(type(self).__name__)
+
+    def narrow(self, params, cfg, w: int):
+        """Demux params for width ``w`` <= cfg.n (see MuxStrategy.narrow).
+        Base class passes through; per-index demuxers slice their N axis."""
+        del cfg, w
+        return params
 
     # -- prefix protocol (only for uses_prefix strategies) ---------------------
 

@@ -43,6 +43,14 @@ class IndexEmbedDemux(DemuxStrategy):
             "mlp": SharedMLPStack.init(k2, dims, param_dtype=param_dtype),
         }
 
+    def narrow(self, params, cfg, w):
+        """Width-``w`` variant: keep ε^1..ε^w plus the shared ε^pad row (the
+        table's last row) and the shared MLP as-is — the prefix protocol at
+        width w reads exactly table rows [:w] + pad."""
+        table = params["prefix_table"]
+        return {"prefix_table": jnp.concatenate([table[:w], table[-1:]]),
+                "mlp": params["mlp"]}
+
     def prefix_embeddings(self, params, cfg, dtype):
         """(N, P, d) prefix embeddings: prefix^i = [pad..pad, ε^i, pad..pad]
         with ε^i at position i (paper Sec 3.2).  P = cfg.prefix_len ≥ N;
@@ -91,6 +99,9 @@ class MLPDemux(DemuxStrategy):
             return SharedMLPStack.init(k, dims, param_dtype=param_dtype)
 
         return {"mlps": jax.vmap(one)(keys)}  # leaves stacked over N
+
+    def narrow(self, params, cfg, w):
+        return {"mlps": jax.tree.map(lambda leaf: leaf[:w], params["mlps"])}
 
     def separate(self, params, h, cfg, *, index_embeds=None):
         del index_embeds

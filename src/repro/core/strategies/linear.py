@@ -11,6 +11,8 @@
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
@@ -37,6 +39,9 @@ class HadamardMux(MuxStrategy):
         v = jax.random.normal(key, (cfg.n, d), jnp.float32)
         return {"v": v.astype(param_dtype)}
 
+    def narrow(self, params, cfg, w):
+        return {"v": params["v"][:w]}
+
     def transform(self, params, x, cfg):
         v = self._maybe_freeze(params["v"].astype(x.dtype), cfg)
         return x * v[None, :, None, :]
@@ -55,6 +60,9 @@ class OrthoMux(MuxStrategy):
         keys = jax.random.split(key, cfg.n)
         mats = jnp.stack([initializers.random_orthogonal(k, d) for k in keys])
         return {"o": mats.astype(param_dtype)}
+
+    def narrow(self, params, cfg, w):
+        return {"o": params["o"][:w]}
 
     def transform(self, params, x, cfg):
         o = self._maybe_freeze(params["o"].astype(x.dtype), cfg)
@@ -82,6 +90,14 @@ class LowRankMux(MuxStrategy):
         u = initializers.random_orthogonal(k1, d)
         q = initializers.random_orthogonal(k2, d)
         return {"u": u.astype(param_dtype), "q": q.astype(param_dtype)}
+
+    def narrow(self, params, cfg, w):
+        # Keep the native subspace rank r = d // n and take the first w
+        # subspaces (w*r orthonormal rows): transform recovers the same r
+        # from the sliced row count, so instances 0..w-1 map exactly as at
+        # full width.
+        r = params["u"].shape[0] // cfg.n
+        return {"u": params["u"][: w * r], "q": params["q"]}
 
     def transform(self, params, x, cfg):
         u = self._maybe_freeze(params["u"].astype(x.dtype), cfg)
@@ -113,6 +129,14 @@ class BinaryMux(MuxStrategy):
         for i in range(n):
             mask = mask.at[i, i * r:(i + 1) * r].set(1.0)
         return {"mask": mask.astype(param_dtype)}
+
+    def narrow(self, params, cfg, w):
+        # A sliced native mask would keep d/n-wide chunks and leave
+        # (n - w) * d/n dims dark; rebuild at d/w so the w lanes partition
+        # the full width (init is deterministic — no key consumed).
+        mask = params["mask"]
+        return self.init(None, dataclasses.replace(cfg, n=w), mask.shape[-1],
+                         param_dtype=mask.dtype)
 
     def transform(self, params, x, cfg):
         m = self._maybe_freeze(params["mask"].astype(x.dtype), cfg)

@@ -54,6 +54,9 @@ class NonlinearConvMux(MuxStrategy):
                         for i in range(n)])
         return {"w1": w1.astype(param_dtype), "w2": w2.astype(param_dtype)}
 
+    def narrow(self, params, cfg, w):
+        return {"w1": params["w1"][:w], "w2": params["w2"][:w]}
+
     def transform(self, params, x, cfg):
         b, n, l, d = x.shape
         s = _side(d)

@@ -146,7 +146,10 @@ def _run_workload(args, cfg, mesh, mi, jax, Backbone, Engine):
              if cfg.serving.prefill_chunk > 1 else "")
           + (f", policy={cfg.serving.policy}" if cfg.serving.policy != "fifo"
              else "")
-          + (", preempt" if cfg.serving.preempt else ""))
+          + (", preempt" if cfg.serving.preempt else "")
+          + (f", width_set={','.join(map(str, cfg.serving.width_set))} "
+             f"({cfg.serving.width_policy})"
+             if cfg.serving.width_set else ""))
     print(f"[serve] continuous: {stats.decode_steps} decode steps, "
           f"{stats.generated_tokens} tokens in {dt:.2f}s "
           f"({stats.generated_tokens / max(dt, 1e-9):.0f} tok/s), "
@@ -155,6 +158,14 @@ def _run_workload(args, cfg, mesh, mi, jax, Backbone, Engine):
     if stats.preemptions or stats.resumes:
         print(f"[serve] preempt-and-swap: {stats.preemptions} slots parked, "
               f"{stats.resumes} resumed")
+    if stats.per_width:
+        compiles = getattr(sched.engine, "variant_compiles", 0)
+        print(f"[serve] width classes ({compiles} variant compiles):")
+        for w, pw in sorted(stats.per_width.items()):
+            print(f"[serve]   n={w}: {pw['count']} finished, "
+                  f"{pw['tokens']} tokens, ttft mean "
+                  f"{_fmt_ttft(pw['ttft_mean'])} "
+                  f"p99 {_fmt_ttft(pw['ttft_p99'])}")
     ramp = [q.ramp_latency for q in sched.finished]
     if ramp:
         import numpy as _np
@@ -290,6 +301,18 @@ def main(argv=None):
     ap.add_argument("--report", action="store_true",
                     help="print TTFT percentiles and per-SLO-class "
                          "completion stats after the run")
+    # adaptive multiplexing width (width classes)
+    ap.add_argument("--width-set", default="",
+                    help="comma list of mux widths (e.g. 1,4): partition "
+                         "the slots into width classes, each on a compiled "
+                         "engine variant (empty = fixed native width)")
+    ap.add_argument("--width-policy", default="static",
+                    help="width policy: static | slo_tiered | load_adaptive "
+                         "(or any registered name) — which class a request "
+                         "rides")
+    ap.add_argument("--max-preemptions", type=int, default=0,
+                    help="per-request preemption cap: a request parked this "
+                         "many times becomes eviction-immune (0 = no cap)")
     # replica router (serving/router.py)
     ap.add_argument("--replicas", type=int, default=1,
                     help="engine+scheduler replicas behind the router "
@@ -342,9 +365,11 @@ def main(argv=None):
 
     getter = get_smoke_config if args.smoke else get_config
     cfg = getter(args.arch, mux_n=args.mux_n)
+    width_set = tuple(int(w) for w in args.width_set.split(",") if w)
     if (args.paged or args.prefill_chunk > 1 or args.policy != "fifo"
             or args.preempt or args.replicas > 1 or args.use_kernel
-            or args.kblock_pages > 1 or args.fuse_demux):
+            or args.kblock_pages > 1 or args.fuse_demux or width_set
+            or args.max_preemptions):
         import dataclasses
         from repro.configs.base import ServingConfig
         cfg = dataclasses.replace(cfg, serving=ServingConfig(
@@ -355,6 +380,8 @@ def main(argv=None):
             fuse_demux=args.fuse_demux,
             prefill_chunk=args.prefill_chunk,
             policy=args.policy, preempt=args.preempt,
+            max_preemptions=args.max_preemptions,
+            width_set=width_set, width_policy=args.width_policy,
             replicas=args.replicas, router_policy=args.router_policy,
             router_sync=args.router_sync))
     print(f"[serve] {cfg.name} N={cfg.mux.n} on mesh "

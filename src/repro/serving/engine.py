@@ -90,6 +90,11 @@ class Engine:
                     f"serving.prefill_chunk={chunk} exceeds the smallest "
                     f"cache ring ({slots} slots); shrink the chunk")
         self._validate_serving_policy(cfg)
+        self._jit = jit
+        # Width-class engine variants (``variant``): lazily built, cached by
+        # (width, batch), counted so telemetry can gauge compile pressure.
+        self._variants: dict[tuple[int, int], "Engine"] = {}
+        self.variant_compiles = 0
         self._prefill = jax.jit(self._prefill_impl) if jit \
             else self._prefill_impl
         # Donate the cache: the decode step aliases the KV buffers instead of
@@ -204,6 +209,51 @@ class Engine:
         pos = jnp.full((self.batch,), p, jnp.int32)
         return ServeState(cache=cache, pos=pos, index_embeds=index_embeds,
                           cross_kv=cross_kv)
+
+    def variant(self, width: int, batch: int) -> "Engine":
+        """Width-class serving variant: an engine serving ``batch`` slots at
+        mux width ``width`` <= cfg.mux.n, sharing this engine's backbone
+        weights but carrying narrowed mux/demux params (each strategy's
+        ``narrow``), its own jitted prefill/step/prime, and its own
+        KV/page-template shapes.  ``width == 1`` is a true unmuxed baseline
+        (mux inactive: no prefix, no demux).  Variants are built lazily and
+        cached by (width, batch); the native (cfg.mux.n, self.batch) pair
+        returns ``self`` — bit-for-bit the single-engine path."""
+        if width == self.cfg.mux.n and batch == self.batch:
+            return self
+        key = (width, batch)
+        if key not in self._variants:
+            self._variants[key] = self._build_variant(width, batch)
+            self.variant_compiles += 1
+        return self._variants[key]
+
+    def _build_variant(self, width: int, batch: int) -> "Engine":
+        from repro.core import strategies
+        cfg = self.cfg
+        if not 1 <= width <= cfg.mux.n:
+            raise ValueError(
+                f"variant width must satisfy 1 <= w <= mux.n={cfg.mux.n}, "
+                f"got {width}")
+        vcfg = dataclasses.replace(
+            cfg,
+            mux=dataclasses.replace(cfg.mux, n=width),
+            # The variant serves exactly one class: clear the width set so
+            # the class-vs-native cross-check cannot trip on siblings.
+            serving=dataclasses.replace(cfg.serving, width_set=()))
+        params = dict(self.params)
+        if width == 1:
+            params.pop("mux", None)
+            params.pop("demux", None)
+        elif cfg.mux.active:
+            params["mux"] = strategies.get_mux(cfg.mux.strategy).narrow(
+                self.params["mux"], cfg.mux, width)
+            params["demux"] = strategies.get_demux(cfg.mux.demux).narrow(
+                self.params["demux"], cfg.mux, width)
+        serve_len = self.max_len - cfg.mux.prefix_len
+        eng = Engine(params, vcfg, batch=batch, max_len=serve_len,
+                     mesh=self.mesh, mesh_info=self.mesh_info, jit=self._jit)
+        eng.tracer = self.tracer
+        return eng
 
     def step(self, state: ServeState, tokens, lane_mask=None,
              block_table=None, chunk_lens=None

@@ -22,6 +22,14 @@ orchestrates step execution:
   * ``SamplingPolicy`` — per-lane next-token selection.  ``lane`` is the
     PR 3 behaviour: exact argmax at temperature 0 (the bit-for-bit default
     path), seeded per-request Gumbel-max otherwise.
+  * ``WidthPolicy`` — which mux-width class an admitted request rides when
+    ``ServingConfig.width_set`` partitions the slots into compiled
+    N-variants (adaptive multiplexing width).  ``static`` sends everything
+    widest-first (raw tok/step); ``slo_tiered`` maps SLO rank onto the
+    width ladder (rank 0 narrowest-first for per-stream fidelity and short
+    mixed streams, lowest rank widest-first); ``load_adaptive`` starts from
+    the tiered order and re-weights it from the live ``SchedulerLoad``
+    probe (classes with open lanes and free pages first).
 
 Authoring a policy is the same three steps as a mux strategy: subclass,
 ``@register_*("name")``, pass the name (``ServingConfig.policy``) or an
@@ -42,6 +50,7 @@ T = TypeVar("T", bound=type)
 _ADMISSION: dict[str, type] = {}
 _EVICTION: dict[str, type] = {}
 _SAMPLING: dict[str, type] = {}
+_WIDTH: dict[str, type] = {}
 
 
 def _register(table: dict[str, type], kind: str, name: str):
@@ -71,6 +80,11 @@ def register_sampling(name: str) -> Callable[[T], T]:
     return _register(_SAMPLING, "sampling", name)
 
 
+def register_width(name: str) -> Callable[[T], T]:
+    """Class decorator: register a WidthPolicy under ``name``."""
+    return _register(_WIDTH, "width", name)
+
+
 def _get(table: dict[str, type], kind: str, name: str) -> type:
     try:
         return table[name]
@@ -92,6 +106,10 @@ def get_sampling(name: str) -> type:
     return _get(_SAMPLING, "sampling", name)
 
 
+def get_width(name: str) -> type:
+    return _get(_WIDTH, "width", name)
+
+
 def list_admission() -> list[str]:
     return sorted(_ADMISSION)
 
@@ -104,6 +122,10 @@ def list_sampling() -> list[str]:
     return sorted(_SAMPLING)
 
 
+def list_width() -> list[str]:
+    return sorted(_WIDTH)
+
+
 def unregister_admission(name: str) -> None:
     _ADMISSION.pop(name, None)
 
@@ -114,6 +136,10 @@ def unregister_eviction(name: str) -> None:
 
 def unregister_sampling(name: str) -> None:
     _SAMPLING.pop(name, None)
+
+
+def unregister_width(name: str) -> None:
+    _WIDTH.pop(name, None)
 
 
 # ---------------------------------------------------------------------------
@@ -381,13 +407,91 @@ class LaneSampling(SamplingPolicy):
         return int(np.argmax(logits))
 
 
+# ---------------------------------------------------------------------------
+# Width classes (adaptive multiplexing width)
+# ---------------------------------------------------------------------------
+
+class WidthPolicy:
+    """Width-class preference at admission, for schedulers whose slots are
+    partitioned into mux-width classes (``ServingConfig.width_set``).
+
+    ``order`` returns class *indices* (into the ascending width tuple) in
+    preference order; the scheduler offers the request to each class in
+    turn and admits into the first one with a lane that fits.  ``load`` is
+    the scheduler's ``SchedulerLoad`` probe (``width_loads`` carries the
+    per-class occupancy) — None when the probe is unavailable, and policies
+    must stay deterministic given (request, widths, load).
+    Stateless — one instance may serve many schedulers.
+    """
+
+    name = "?"
+
+    def __init__(self, slo: SloClasses):
+        self.slo = slo
+
+    def order(self, req, widths: Sequence[int], load=None) -> list[int]:
+        raise NotImplementedError
+
+
+@register_width("static")
+class StaticWidth(WidthPolicy):
+    """Widest-first for every request regardless of SLO or load: maximum
+    superposition (raw tok/step), narrow classes only as overflow."""
+
+    def order(self, req, widths, load=None) -> list[int]:
+        return list(range(len(widths) - 1, -1, -1))
+
+
+@register_width("slo_tiered")
+class SloTieredWidth(WidthPolicy):
+    """Map SLO rank onto the width ladder: rank 0 (highest class) targets
+    the narrowest width — shorter mixed stream, higher per-stream fidelity,
+    fastest TTFT — the lowest rank targets the widest, and middle ranks
+    interpolate.  From the target the preference walks outward, wider side
+    first (spare capacity should cost throughput before it costs the
+    latency tier its narrow lanes)."""
+
+    def order(self, req, widths, load=None) -> list[int]:
+        k = len(widths)
+        if k <= 1:
+            return list(range(k))
+        top = max(1, len(self.slo.names) - 1)
+        target = round(self.slo.rank(req.slo) / top * (k - 1))
+        rest = sorted((i for i in range(k) if i != target),
+                      key=lambda i: (abs(i - target), -i))
+        return [target] + rest
+
+
+@register_width("load_adaptive")
+class LoadAdaptiveWidth(SloTieredWidth):
+    """``slo_tiered`` re-weighted by the live load probe: classes that can
+    take the request *now* (an open lane, and under paging at least one
+    free page) move ahead of saturated ones, preserving the tiered order
+    within each group.  Queue pressure keeps the tiered target honest —
+    with no probe (or a probe without width data) this is exactly
+    ``slo_tiered``."""
+
+    def order(self, req, widths, load=None) -> list[int]:
+        base = super().order(req, widths, load)
+        wl = getattr(load, "width_loads", ()) if load is not None else ()
+        if not wl or len(wl) != len(widths):
+            return base
+        def saturated(i):
+            cls = wl[i]
+            if cls.get("free_lanes", 0) <= 0:
+                return True
+            pages = cls.get("free_pages")
+            return pages is not None and pages <= 0
+        return sorted(base, key=saturated)
+
+
 def resolve(kind: str, spec, slo: SloClasses):
     """Resolve a policy ``spec`` (registered name or instance) for ``kind``
-    in {"admission", "eviction", "sampling"}."""
+    in {"admission", "eviction", "sampling", "width"}."""
     table = {"admission": _ADMISSION, "eviction": _EVICTION,
-             "sampling": _SAMPLING}[kind]
+             "sampling": _SAMPLING, "width": _WIDTH}[kind]
     base = {"admission": AdmissionPolicy, "eviction": EvictionPolicy,
-            "sampling": SamplingPolicy}[kind]
+            "sampling": SamplingPolicy, "width": WidthPolicy}[kind]
     if isinstance(spec, base):
         return spec
     if isinstance(spec, str):

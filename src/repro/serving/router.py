@@ -180,6 +180,19 @@ class LeastLoadedRouting(RoutingPolicy):
         return max(open_, key=lambda c: _capacity_key(c[1]) + (-c[0],))[0]
 
 
+def _narrow_key(load: SchedulerLoad) -> tuple:
+    """Width-class tiebreak for latency traffic: prefer the replica whose
+    *narrowest* width class — the slots a rank-0 request would ride under
+    the slo_tiered/load_adaptive width policies — has a free lane, then the
+    one where that class's own headroom is largest.  Replicas without
+    width classes report ``width_loads == ()`` and contribute a constant
+    (0, 0), so a homogeneous fixed-N fleet orders exactly as before."""
+    wl = getattr(load, "width_loads", ())
+    if not wl:
+        return (0, 0)
+    return (int(wl[0]["free_lanes"] > 0), wl[0]["headroom"])
+
+
 @register_routing("slo_headroom")
 class SloHeadroomRouting(RoutingPolicy):
     """Latency traffic chases admission-horizon headroom: a top-rank
@@ -187,7 +200,10 @@ class SloHeadroomRouting(RoutingPolicy):
     leaves the most positions before ``max_len`` — ``SchedulerLoad.headroom``,
     derived from the scheduler's exact ``_sim_ends`` ramp simulation — so
     it lands where its first token comes soonest and its budget provably
-    fits.  Lower-rank traffic falls back to least-loaded."""
+    fits.  Replicas running width classes (``width_set``) outrank on their
+    narrowest class's availability first (``_narrow_key``): that is where
+    a latency request would actually land.  Lower-rank traffic falls back
+    to least-loaded."""
 
     def __init__(self, slo: SloClasses):
         super().__init__(slo)
@@ -199,7 +215,7 @@ class SloHeadroomRouting(RoutingPolicy):
         open_ = [(i, ld) for i, ld in candidates if _open_lanes(ld) > 0]
         if not open_:
             return None
-        return max(open_, key=lambda c: (c[1].headroom,)
+        return max(open_, key=lambda c: _narrow_key(c[1]) + (c[1].headroom,)
                    + _capacity_key(c[1]) + (-c[0],))[0]
 
 

@@ -45,6 +45,20 @@ Cache layout is pluggable (``cfg.serving.paged``): contiguous
 checks free pages, with parked groups' worst-case footprints reserved so
 resumption never deadlocks on the pool).
 
+Adaptive multiplexing width (``cfg.serving.width_set``): the B slots are
+partitioned into *width classes*, each served by a compiled engine variant
+at its own mux width (``Engine.variant``: narrowed mux/demux params and
+index embeds, shared backbone weights, per-class KV/page templates and —
+under paging — per-class page pools).  A ``WidthPolicy``
+(``serving/policies.py``: static | slo_tiered | load_adaptive) decides at
+admission which class a request rides: latency-SLO traffic lands on low-N
+slots (shorter mixed stream, higher per-stream fidelity, faster TTFT),
+bulk traffic on high-N slots for raw tok/step.  The swap unit stays the
+slot, within its class — a parked group resumes only into its own class
+(the cache shape is class-specific).  An empty ``width_set`` (or a
+singleton at the native width) is one class on the engine itself:
+bit-for-bit today's fixed-N scheduler.
+
 Prefix protocol note: for causal backbones the demux-prefix hidden states
 (``index_embeds``) and prefix K/V depend only on the prefix itself, so the
 scheduler computes them once (``Engine.prime``) and reuses them across every
@@ -90,6 +104,8 @@ class Request:
                                   # Queueing delay included — the latency an
                                   # SLO deadline is written against.
     preempted: int = 0            # times this request's slot was parked
+    width: int = 0                # mux width of the class it was admitted
+                                  # into (0 until admission)
     output: list = dataclasses.field(default_factory=list)
     fed: int = 0                  # prompt tokens consumed so far (ramp cursor)
     rng: Any = None               # lazily built per-request sampler
@@ -128,7 +144,7 @@ class Request:
         several engines/schedulers."""
         return dataclasses.replace(self, output=[], fed=0, admitted_step=-1,
                                    finished_step=-1, ttft=-1,
-                                   preempted=0, rng=None)
+                                   preempted=0, width=0, rng=None)
 
 
 def poisson_trace(n_requests: int, *, rate: float, prompt_len: int,
@@ -213,6 +229,11 @@ class SchedulerLoad:
     headroom: int          # best single-request admission headroom in
                            # positions: max over slots with a free lane of
                            # max_len - slot horizon (0 when no lane is free)
+    width_loads: tuple = ()  # per-width-class load dicts (ascending width)
+                             # when width_set partitions the slots; () for a
+                             # single class, so every fixed-N consumer —
+                             # router keys, load_adaptive fallbacks, bench
+                             # payloads — sees exactly the legacy snapshot
 
     @property
     def lane_utilization(self) -> float:
@@ -238,6 +259,7 @@ class SchedulerStats:
     ttft_p50: float = -1.0              # time-to-first-token percentiles
     ttft_p99: float = -1.0              #   (filled by ``run``)
     per_class: dict = dataclasses.field(default_factory=dict)
+    per_width: dict = dataclasses.field(default_factory=dict)
     final_load: Optional[SchedulerLoad] = None  # load snapshot after ``run``
 
     @property
@@ -267,6 +289,49 @@ class SchedulerStats:
                                       / len(tt)) if tt else 0.0,
                 "preempted": sum(r.preempted for r in rs),
             }
+        self.per_width = {}
+        for w in sorted({r.width for r in finished if r.width > 0}):
+            rs = [r for r in finished if r.width == w]
+            tt = [r.ttft for r in rs if r.ttft >= 0]
+            self.per_width[w] = {
+                "count": len(rs),
+                "tokens": sum(len(r.output) for r in rs),
+                "ttft_mean": float(np.mean(tt)) if tt else -1.0,
+                "ttft_p50": float(np.percentile(tt, 50)) if tt else -1.0,
+                "ttft_p99": float(np.percentile(tt, 99)) if tt else -1.0,
+                "preempted": sum(r.preempted for r in rs),
+            }
+
+
+@dataclasses.dataclass
+class WidthClass:
+    """One width class of the slot grid: a contiguous block of slots served
+    by a compiled engine variant at ``width`` mux lanes.
+
+    The class owns everything whose shape depends on the width — the engine
+    variant (narrowed mux/demux params over shared backbone weights), the
+    primed prefix state, and the KV allocator (per-class page pool under
+    paging: block shapes differ across widths, so pages cannot be shared).
+    Slot indices are global; allocator calls translate by ``start``."""
+    index: int              # position in the ascending width_set
+    width: int              # mux lanes per slot in this class
+    start: int              # first global slot of the class block
+    n_slots: int            # slots in the class block
+    engine: Any             # Engine variant (the native engine itself when
+                            # width == cfg.mux.n and the class spans B)
+    allocator: Any          # per-class KV/page allocator (local slot ids)
+    index_embeds: Any       # primed demux-prefix hiddens at this width
+    cross_kv: Any
+    mux_active: bool
+    prefix_len: int         # this width's demux-prefix length
+    max_len: int            # engine.max_len of the variant
+
+    @property
+    def slots(self) -> range:
+        return range(self.start, self.start + self.n_slots)
+
+    def local(self, slot: int) -> int:
+        return slot - self.start
 
 
 class ContinuousScheduler:
@@ -277,7 +342,8 @@ class ContinuousScheduler:
     ``cfg.serving`` so a config fully describes the serving behaviour."""
 
     def __init__(self, engine: Engine, *, policy=None, preempt=None,
-                 eviction=None, sampling=None, tracer=None):
+                 eviction=None, sampling=None, width_policy=None,
+                 tracer=None):
         self.engine = engine
         cfg = engine.cfg
         self.slo = SloClasses(cfg.serving.slo_classes)
@@ -298,9 +364,12 @@ class ContinuousScheduler:
                 f"policy='slo'/'priority' or pass eviction= explicitly")
         self.sampling = serving_policies.resolve(
             "sampling", "lane" if sampling is None else sampling, self.slo)
+        self.width = serving_policies.resolve(
+            "width",
+            cfg.serving.width_policy if width_policy is None else width_policy,
+            self.slo)
 
         self.n_slots = engine.batch
-        self.n_lanes = cfg.mux.n if cfg.mux.active else 1
         self.prefix_len = cfg.mux.prefix_len
         self.paged = cfg.serving.paged
         # Chunked prefill: an admitted prompt feeds up to ``chunk`` tokens
@@ -308,28 +377,76 @@ class ContinuousScheduler:
         # single-token step bit-for-bit.
         self.chunk = max(1, cfg.serving.prefill_chunk)
 
+        # Width classes: partition the B slots across cfg.serving.width_set
+        # (ascending; evenly, remainder to the widest — lanes are the
+        # scarce resource).  An empty width_set is one class at the native
+        # width on the engine itself — the fixed-N scheduler, bit-for-bit.
+        native = cfg.mux.n if cfg.mux.active else 1
+        self.widths = tuple(cfg.serving.width_set) or (native,)
+        k = len(self.widths)
+        if self.n_slots < k:
+            raise ValueError(
+                f"width_set {self.widths} needs at least {k} slots but the "
+                f"engine batch is {self.n_slots}; shrink width_set or raise "
+                f"batch")
+        counts = [self.n_slots // k] * k
+        for i in range(self.n_slots % k):
+            counts[k - 1 - i] += 1
+        self.n_lanes = max(self.widths)
+
         # Paged: prime against a prefix-sized cache (no dense (B, max_len)
         # transient); the allocator imports the prefix pages from it.  The
         # contiguous allocator needs the full-width template for its masked
         # slot resets, so it keeps the full prime.
-        primed = engine.prime(compact=self.paged)
-        if self.paged:
-            self.allocator = PagedKVSlotAllocator(
-                cfg, self.n_slots, engine.max_len, template=primed.cache)
-        else:
-            self.allocator = KVSlotAllocator(
-                cfg, self.n_slots, engine.max_len, template=primed.cache)
-        self.index_embeds = primed.index_embeds
-        self.cross_kv = primed.cross_kv
+        engines = [engine.variant(w, c) for w, c in zip(self.widths, counts)]
+        pools = self._split_pool(cfg, engines, counts) \
+            if self.paged else [0] * k
+        self.classes: list[WidthClass] = []
+        start = 0
+        for i, (w, veng) in enumerate(zip(self.widths, engines)):
+            primed = veng.prime(compact=self.paged)
+            if self.paged:
+                alloc = PagedKVSlotAllocator(
+                    veng.cfg, counts[i], veng.max_len, template=primed.cache,
+                    pool_pages=pools[i])
+            else:
+                alloc = KVSlotAllocator(
+                    veng.cfg, counts[i], veng.max_len, template=primed.cache)
+            self.classes.append(WidthClass(
+                index=i, width=w, start=start, n_slots=counts[i],
+                engine=veng, allocator=alloc,
+                index_embeds=primed.index_embeds, cross_kv=primed.cross_kv,
+                mux_active=veng.cfg.mux.active,
+                prefix_len=veng.cfg.mux.prefix_len, max_len=veng.max_len))
+            start += counts[i]
+        self.multiclass = k > 1
+        # Legacy accessors: the single-class scheduler is the fixed-N one,
+        # and external probes (tests, benches) reach these directly.
+        self.allocator = self.classes[0].allocator
+        self.index_embeds = self.classes[0].index_embeds
+        self.cross_kv = self.classes[0].cross_kv
+        # slot -> class index / class prefix length, for O(1) dispatch.
+        self.cls_of = np.concatenate(
+            [np.full(c.n_slots, c.index, np.int32) for c in self.classes])
+        self.prefix_by_slot = np.concatenate(
+            [np.full(c.n_slots, c.prefix_len, np.int32)
+             for c in self.classes])
 
-        self.table = SlotTable(self.n_slots, self.n_lanes)
+        self.table = SlotTable(
+            self.n_slots, self.n_lanes,
+            lane_counts=None if not self.multiclass else np.concatenate(
+                [np.full(c.n_slots, c.width, np.int64)
+                 for c in self.classes]))
         self.ledger = SwapLedger()
-        self.pos = np.full(self.n_slots, self.prefix_len, np.int32)
+        self.pos = self.prefix_by_slot.astype(np.int32).copy()
         # Preemption hysteresis: the step a slot last admitted or resumed a
         # request.  With ``min_residency_steps`` K > 0 the eviction policy
         # never parks a slot younger than K steps — a flapping latency
         # class cannot churn the same batch victim every step.
         self.min_residency = cfg.serving.min_residency_steps
+        # Per-request preemption cap: a request parked this many times is
+        # eviction-immune (its slot drops out of _park_candidates).
+        self.max_preemptions = cfg.serving.max_preemptions
         self.slot_since = np.full(self.n_slots, -(1 << 60), np.int64)
         # Per-lane end-position horizon (exclusive; -1 = free lane),
         # refreshed from the exact ramp simulation each admission round:
@@ -338,20 +455,58 @@ class ContinuousScheduler:
         self.lane_end = np.full((self.n_slots, self.n_lanes), -1, np.int64)
         self.requests: dict[int, Request] = {}
         self.finished: list[Request] = []
+        # Per-width running TTFT sums (first tokens seen so far), feeding
+        # the width-class telemetry gauges; multi-class only.
+        self._width_ttft: dict[int, list] = {}
         self.t = 0                       # scheduler clock (steps)
         self.stats = SchedulerStats(
             slot_active_steps=np.zeros(self.n_slots, np.int64))
         self.set_tracer(tracer)
 
+    @staticmethod
+    def _split_pool(cfg, engines, counts) -> list[int]:
+        """Per-class page-pool sizes.  ``serving.pool_pages == 0`` lets each
+        allocator take its dense default (every slot fully resident) by
+        passing 0 through.  An explicit pool splits proportionally to each
+        class's dense footprint (slots × pages per full slot), remainder to
+        the widest, floored at each class's allocator minimum (prefix pages
+        per slot + working page + trash page)."""
+        total = cfg.serving.pool_pages
+        k = len(engines)
+        if not total or k == 1:
+            return [total] * k
+        ps = cfg.serving.page_size
+        dense = [c * pages_for(e.max_len, ps) + 1
+                 for e, c in zip(engines, counts)]
+        mins = [max(2, c * pages_for(e.cfg.mux.prefix_len, ps) + 2)
+                for e, c in zip(engines, counts)]
+        weight = sum(dense)
+        pools = [min(d, total * d // weight) for d in dense]
+        pools[-1] += min(total, weight) - sum(pools)
+        pools = [max(p, m) for p, m in zip(pools, mins)]
+        if sum(pools) > total:
+            raise ValueError(
+                f"serving.pool_pages={total} cannot cover width_set "
+                f"{tuple(e.cfg.mux.n for e in engines)}: per-class minimums "
+                f"are {mins} pages ({sum(mins)} total); raise pool_pages or "
+                f"drop a width class")
+        return pools
+
+    def _cls(self, slot: int) -> WidthClass:
+        return self.classes[int(self.cls_of[slot])]
+
     def set_tracer(self, tracer) -> None:
         """Attach a telemetry recorder (``serving/telemetry.py``) to this
-        scheduler and everything it owns — engine, allocator, swap ledger.
-        ``tracer`` may be a ``Tracer`` (bound to replica scope 0), an
-        existing scope (a router hands each replica its own), or None (the
-        ``NULL_TRACER`` no-op default: the untraced path is untouched)."""
+        scheduler and everything it owns — engines, allocators, swap
+        ledger.  ``tracer`` may be a ``Tracer`` (bound to replica scope 0),
+        an existing scope (a router hands each replica its own), or None
+        (the ``NULL_TRACER`` no-op default: the untraced path is
+        untouched)."""
         self.tracer = as_scope(tracer)
         self.engine.tracer = self.tracer
-        self.allocator.tracer = self.tracer
+        for c in self.classes:
+            c.engine.tracer = self.tracer
+            c.allocator.tracer = self.tracer
         self.ledger.tracer = self.tracer
 
     # -- queue (delegated to the admission policy) -----------------------------
@@ -359,28 +514,40 @@ class ContinuousScheduler:
     def accepts(self, req: Request) -> Optional[str]:
         """None when this scheduler could ever hold ``req``, else the
         refusal reason — the submit-time fast-fail as a non-raising probe,
-        so a router can test heterogeneous replicas before dispatching."""
-        need = self.prefix_len + len(req.prompt) + req.max_new_tokens
-        if need > self.engine.max_len:
+        so a router can test heterogeneous replicas before dispatching.
+        With width classes, acceptance anywhere suffices — the width policy
+        only orders classes, it never strands an admissible request."""
+        reasons = [self._class_accepts(req, c) for c in self.classes]
+        if any(r is None for r in reasons):
+            return None
+        if len(reasons) == 1:
+            return reasons[0]
+        return (f"request {req.rid} fits no width class: "
+                + " | ".join(f"n={c.width}: {r}"
+                             for c, r in zip(self.classes, reasons)))
+
+    def _class_accepts(self, req: Request, c: WidthClass) -> Optional[str]:
+        need = c.prefix_len + len(req.prompt) + req.max_new_tokens
+        if need > c.max_len:
             hint = ("raise Engine max_len — under paging the table width is "
                     "cheap, memory is pooled per page"
                     if self.paged else
                     "raise Engine max_len or clip the trace (paged "
                     "attention — cfg.serving.paged — is the real fix)")
             return (f"request {req.rid} needs {need} positions but the cache "
-                    f"holds {self.engine.max_len}; {hint}")
+                    f"holds {c.max_len}; {hint}")
         if self.paged:
             # A request that cannot fit even with every other slot drained
             # to its prefix pages would starve in the queue forever.
-            alloc = self.allocator
-            floor = ((self.n_slots - 1) * alloc.n_prefix_pages
+            alloc = c.allocator
+            floor = ((c.n_slots - 1) * alloc.n_prefix_pages
                      + pages_for(need, alloc.page_size))
             if floor > alloc.table.usable_pages:
                 return (
                     f"request {req.rid} needs "
                     f"{pages_for(need, alloc.page_size)} "
                     f"pages but the pool can never free more than "
-                    f"{alloc.table.usable_pages - (self.n_slots - 1) * alloc.n_prefix_pages}"
+                    f"{alloc.table.usable_pages - (c.n_slots - 1) * alloc.n_prefix_pages}"
                     f"; raise serving.pool_pages")
         return None
 
@@ -494,19 +661,21 @@ class ContinuousScheduler:
             for l, e in zip(idx, ends):
                 self.lane_end[s, l] = e
 
-    def _fits_pages(self, fresh: set, overrides: dict,
+    def _fits_pages(self, c: WidthClass, fresh: set, overrides: dict,
                     extra_reserved: int = 0) -> bool:
         """Paged admission: would every slot's worst-case footprint — plus
-        the swap ledger's parked reservations — still fit the pool?
-        ``overrides`` maps slot -> hypothetical end horizon (a candidate
-        admission or a preemption's fresh occupant); slots recycled this
-        round (``fresh``) count their prefix pages only.  Parked groups
-        reserve their full horizon, so resumption never waits on pages."""
-        alloc = self.allocator
-        total = self.ledger.reserved_pages() + extra_reserved
-        for s in range(self.n_slots):
+        the swap ledger's parked reservations — still fit the class's pool?
+        ``overrides`` maps (global) slot -> hypothetical end horizon (a
+        candidate admission or a preemption's fresh occupant); slots
+        recycled this round (``fresh``) count their prefix pages only.
+        Parked groups reserve their full horizon, so resumption never waits
+        on pages.  Pools are per width class, so only the class's own slots
+        and parked groups count against it."""
+        alloc = c.allocator
+        total = self.ledger.reserved_pages(c.index) + extra_reserved
+        for s in c.slots:
             allocated = alloc.n_prefix_pages if s in fresh \
-                else int(alloc.table.n_allocated[s])
+                else int(alloc.table.n_allocated[c.local(s)])
             horizon = overrides.get(s, int(self.lane_end[s].max()))
             need = allocated
             if horizon > 0:
@@ -525,48 +694,70 @@ class ContinuousScheduler:
         here instead of recomputing it from ``allocator.table``."""
         self._refresh_horizons()
         grid = self.table.grid
-        total_lanes = self.n_slots * self.n_lanes
+        total_lanes = sum(c.n_slots * c.width for c in self.classes)
         free_lanes = int((grid == FREE).sum())
         free_slots = sum(self.table.slot_empty(s)
                          for s in range(self.n_slots))
-        # Best single-request headroom: an empty slot admits at prefix_len;
-        # a live slot with a free lane admits in-stream at its horizon.
-        # Slots with no free lane cannot admit at all.
         headroom = 0
-        slot_room = []
-        for s in range(self.n_slots):
-            if self.table.slot_empty(s):
-                room = self.engine.max_len - self.prefix_len
-                has_lane = True
+        free_pages = usable = in_use = 0
+        free_positions = 0
+        width_loads = []
+        for c in self.classes:
+            # Best single-request headroom: an empty slot admits at
+            # prefix_len; a live slot with a free lane admits in-stream at
+            # its horizon.  Slots with no free lane cannot admit at all.
+            c_headroom = 0
+            slot_room = []
+            for s in c.slots:
+                if self.table.slot_empty(s):
+                    room = c.max_len - c.prefix_len
+                    has_lane = True
+                else:
+                    room = c.max_len - int(self.lane_end[s].max())
+                    has_lane = bool((grid[s] == FREE).any())
+                slot_room.append(max(0, room))
+                if has_lane:
+                    c_headroom = max(c_headroom, max(0, room))
+            if self.paged:
+                alloc = c.allocator
+                committed = self.ledger.reserved_pages(c.index)
+                for s in c.slots:
+                    allocated = int(alloc.table.n_allocated[c.local(s)])
+                    horizon = int(self.lane_end[s].max())
+                    need = allocated
+                    if horizon > 0:
+                        need = max(need, pages_for(horizon, alloc.page_size))
+                    committed += need
+                c_free_pages = alloc.table.usable_pages - committed
+                c_free_positions = max(0, c_free_pages) * alloc.page_size
+                usable += alloc.table.usable_pages
+                in_use += alloc.table.pages_in_use
+                c_headroom = min(c_headroom, c_free_positions)
             else:
-                room = self.engine.max_len - int(self.lane_end[s].max())
-                has_lane = bool((grid[s] == FREE).any())
-            slot_room.append(max(0, room))
-            if has_lane:
-                headroom = max(headroom, max(0, room))
-        if self.paged:
-            alloc = self.allocator
-            committed = self.ledger.reserved_pages()
-            for s in range(self.n_slots):
-                allocated = int(alloc.table.n_allocated[s])
-                horizon = int(self.lane_end[s].max())
-                need = allocated
-                if horizon > 0:
-                    need = max(need, pages_for(horizon, alloc.page_size))
-                committed += need
-            free_pages = alloc.table.usable_pages - committed
-            free_positions = max(0, free_pages) * alloc.page_size
-            usable, in_use = alloc.table.usable_pages, alloc.table.pages_in_use
-            headroom = min(headroom, free_positions)
-        else:
-            free_positions = sum(slot_room)
-            free_pages, usable, in_use = free_positions, 0, 0
+                c_free_positions = sum(slot_room)
+                c_free_pages = c_free_positions
+            free_pages += c_free_pages
+            free_positions += c_free_positions
+            headroom = max(headroom, c_headroom)
+            if self.multiclass:
+                width_loads.append({
+                    "width": c.width,
+                    "total_lanes": c.n_slots * c.width,
+                    "free_lanes": int((grid[c.start:c.start + c.n_slots]
+                                       == FREE).sum()),
+                    "free_slots": sum(self.table.slot_empty(s)
+                                      for s in c.slots),
+                    "parked": sum(g.wclass == c.index for g in self.ledger),
+                    "free_pages": c_free_pages,
+                    "headroom": c_headroom,
+                })
         return SchedulerLoad(
             free_lanes=free_lanes, total_lanes=total_lanes,
             free_slots=free_slots, waiting=self._waiting(),
             parked=len(self.ledger), free_pages=free_pages,
             usable_pages=usable, pages_in_use=in_use,
-            free_positions=free_positions, headroom=headroom)
+            free_positions=free_positions, headroom=headroom,
+            width_loads=tuple(width_loads))
 
     # -- admission -------------------------------------------------------------
 
@@ -580,73 +771,121 @@ class ContinuousScheduler:
         fresh: set[int] = set()          # slots recycled this round
         self._refresh_horizons()
         self._resume_parked(target)
+        # One width-policy load snapshot per admission round (multi-class
+        # only): the policy orders classes, it does not need mid-round
+        # precision, and the probe is not free.
+        wload = self.load() if self.multiclass else None
         n_admitted = 0
         while True:
-            n_admitted += self._fill_free_lanes(target, fresh, to_reset)
+            n_admitted += self._fill_free_lanes(target, fresh, to_reset,
+                                                wload)
             if not (self.preempt and self._preempt_one(target, fresh,
-                                                       to_reset)):
+                                                       to_reset, wload)):
                 break
         if to_reset.any():
-            self.allocator.reset_slots(to_reset)
-            self.pos[to_reset] = self.prefix_len
+            for c in self.classes:
+                sel = to_reset[c.start:c.start + c.n_slots]
+                if sel.any():
+                    c.allocator.reset_slots(sel)
+            self.pos[to_reset] = self.prefix_by_slot[to_reset]
             self.stats.slot_resets += int(to_reset.sum())
         self.stats.admitted += n_admitted
 
+    def _class_order(self, req: Request, wload) -> list[int]:
+        """Class indices to try for ``req``, best first, from the width
+        policy — sanitised so a custom policy returning junk degrades to
+        trying every class rather than stranding the request."""
+        if not self.multiclass:
+            return [0]
+        k = len(self.classes)
+        order = [i for i in self.width.order(req, self.widths, wload)
+                 if isinstance(i, int) and 0 <= i < k]
+        seen = set()
+        order = [i for i in order if not (i in seen or seen.add(i))]
+        return order + [i for i in range(k) if i not in seen]
+
     def _fill_free_lanes(self, target: dict, fresh: set,
-                         to_reset: np.ndarray) -> int:
+                         to_reset: np.ndarray, wload=None) -> int:
         """Offer free lanes to the admission policy's head request: an
         empty slot rewinds to the primed prefix; a live slot admits
         in-stream at its current position (the prompt ramps during
         decode).  A lane is granted only if the exact horizons of every
-        lane it would share the slot with stay inside the cache (and, when
-        paged, the pool)."""
+        lane it would share the slot with stay inside the class's cache
+        (and, when paged, its pool).
+
+        The head request scans classes in the width policy's order; within
+        a class, free lanes are consumed by a persistent slot-major cursor
+        — a lane one request refused is never re-offered this round, which
+        keeps the round linear in lanes and, with a single class, replays
+        the legacy lane-major loop decision-for-decision."""
         n = 0
-        for (s, l) in self.table.free_lanes():
+        lanes = {c.index: (sl for sl in self.table.free_lanes()
+                           if self.cls_of[sl[0]] == c.index)
+                 for c in self.classes}
+        while True:
             req = self._peek()
             if req is None:
                 break
-            if s not in target:
-                if self.table.slot_empty(s):
-                    target[s] = self.prefix_len
-                    fresh.add(s)
-                else:
-                    target[s] = int(self.pos[s])
-            pos = target[s]
-            idx, ends, all_ends = self._slot_horizons(
-                s, pos, extra=(len(req.prompt), req.max_new_tokens))
-            horizon = max(all_ends)
-            if horizon > self.engine.max_len:
-                continue  # slot too deep for this request; try another lane
-            if self.paged and not self._fits_pages(fresh, {s: horizon}):
-                continue  # pool too full for this slot; try another lane
-            self._pop()
-            if pos != int(self.pos[s]):
-                to_reset[s] = True
-            self.table.occupy(s, l, req.rid)
-            self.slot_since[s] = self.t
-            # Exact bookkeeping for every lane the admission touches: the
-            # co-lanes' ends move only as far as the simulation says (zero
-            # when an in-flight ramp already covers the new prompt).
-            for li, e in zip(idx, ends):
-                self.lane_end[s, li] = e
-            self.lane_end[s, l] = all_ends[-1]
-            req.admitted_step = self.t
-            if self.tracer.enabled:
-                self.tracer.event("admit", rid=req.rid, slot=s, lane=l,
-                                  pos=pos, horizon=int(all_ends[-1]))
-            n += 1
+            placed = False
+            for ci in self._class_order(req, wload):
+                c = self.classes[ci]
+                for (s, l) in lanes[ci]:
+                    if s not in target:
+                        if self.table.slot_empty(s):
+                            target[s] = c.prefix_len
+                            fresh.add(s)
+                        else:
+                            target[s] = int(self.pos[s])
+                    pos = target[s]
+                    idx, ends, all_ends = self._slot_horizons(
+                        s, pos, extra=(len(req.prompt), req.max_new_tokens))
+                    horizon = max(all_ends)
+                    if horizon > c.max_len:
+                        continue  # slot too deep for this request
+                    if self.paged and not self._fits_pages(c, fresh,
+                                                           {s: horizon}):
+                        continue  # pool too full for this slot
+                    self._pop()
+                    if pos != int(self.pos[s]):
+                        to_reset[s] = True
+                    self.table.occupy(s, l, req.rid)
+                    self.slot_since[s] = self.t
+                    # Exact bookkeeping for every lane the admission
+                    # touches: the co-lanes' ends move only as far as the
+                    # simulation says (zero when an in-flight ramp already
+                    # covers the new prompt).
+                    for li, e in zip(idx, ends):
+                        self.lane_end[s, li] = e
+                    self.lane_end[s, l] = all_ends[-1]
+                    req.admitted_step = self.t
+                    req.width = c.width
+                    if self.tracer.enabled:
+                        self.tracer.event("admit", rid=req.rid, slot=s,
+                                          lane=l, pos=pos,
+                                          horizon=int(all_ends[-1]))
+                    n += 1
+                    placed = True
+                    break
+                if placed:
+                    break
+            if not placed:
+                break
         return n
 
     # -- preempt-and-swap ------------------------------------------------------
 
-    def _park_candidates(self, target: dict) -> list:
-        """Slots eligible to park: live lanes, untouched this admission
-        round (no planned admissions or resumes to unwind), and — under
-        ``min_residency_steps`` K — resident at least K steps since their
-        last admission or resume (hysteresis: a freshly resumed victim is
-        shielded, so a flapping outranking class cannot churn it)."""
+    def _park_candidates(self, target: dict, c: WidthClass) -> list:
+        """Slots of class ``c`` eligible to park: live lanes, untouched
+        this admission round (no planned admissions or resumes to unwind),
+        resident at least ``min_residency_steps`` since their last
+        admission or resume (hysteresis: a freshly resumed victim is
+        shielded, so a flapping outranking class cannot churn it), and —
+        under ``max_preemptions`` K — holding no request already parked K
+        times (a bounced request becomes eviction-immune, so bulk traffic
+        cannot starve behind a steady latency stream)."""
+        cap = self.max_preemptions
         out = []
-        for s in range(self.n_slots):
+        for s in c.slots:
             if s in target or self.table.slot_empty(s):
                 continue
             if (self.min_residency and
@@ -654,45 +893,54 @@ class ContinuousScheduler:
                 continue
             reqs = [self.requests[int(r)] for r in self.table.grid[s]
                     if r >= 0]
+            if cap and any(r.preempted >= cap for r in reqs):
+                continue
             out.append((s, reqs))
         return out
 
     def _preempt_one(self, target: dict, fresh: set,
-                     to_reset: np.ndarray) -> bool:
+                     to_reset: np.ndarray, wload=None) -> bool:
         """Park one victim slot for the head request, if the eviction
         policy names one and the freed slot verifiably fits the request —
-        the subsequent fill round then admits it there.  Returns whether a
-        preemption happened."""
+        the subsequent fill round then admits it there.  Victims are
+        sought class by class in the width policy's order, so a latency
+        request preempts on the narrow slots it would ride.  Returns
+        whether a preemption happened."""
         req = self._peek()
         if req is None:
             return False
-        victim = self.eviction.select_victim(req,
-                                             self._park_candidates(target))
-        if victim is None:
-            return False
-        end = self.prefix_len + len(req.prompt) + req.max_new_tokens
-        if end > self.engine.max_len:
-            return False
-        group_reserve = 0
-        if self.paged:
-            alloc = self.allocator
-            # The park itself reprovisions fresh prefix pages for the freed
-            # slot; pages freed by this round's recycles return to the free
-            # list only at the batched reset, so check the list directly.
-            if alloc.table.free_pages < alloc.n_prefix_pages:
-                return False
-            group_reserve = pages_for(int(self.lane_end[victim].max()),
-                                      alloc.page_size)
-            if not self._fits_pages(fresh | {victim}, {victim: end},
-                                    extra_reserved=group_reserve):
-                return False
-        self._park(victim, group_reserve, target, fresh, to_reset)
-        return True
+        for ci in self._class_order(req, wload):
+            c = self.classes[ci]
+            end = c.prefix_len + len(req.prompt) + req.max_new_tokens
+            if end > c.max_len:
+                continue
+            victim = self.eviction.select_victim(
+                req, self._park_candidates(target, c))
+            if victim is None:
+                continue
+            group_reserve = 0
+            if self.paged:
+                alloc = c.allocator
+                # The park itself reprovisions fresh prefix pages for the
+                # freed slot; pages freed by this round's recycles return
+                # to the free list only at the batched reset, so check the
+                # list directly.
+                if alloc.table.free_pages < alloc.n_prefix_pages:
+                    continue
+                group_reserve = pages_for(int(self.lane_end[victim].max()),
+                                          alloc.page_size)
+                if not self._fits_pages(c, fresh | {victim}, {victim: end},
+                                        extra_reserved=group_reserve):
+                    continue
+            self._park(victim, group_reserve, target, fresh, to_reset)
+            return True
+        return False
 
     def _park(self, victim: int, group_reserve: int, target: dict,
               fresh: set, to_reset: np.ndarray) -> None:
         """Move the victim slot's live lanes into the swap ledger and hand
         the slot, rewound to the primed prefix, to the next admission."""
+        c = self._cls(victim)
         lanes: dict[int, Request] = {}
         for l in range(self.n_lanes):
             rid = int(self.table.grid[victim, l])
@@ -708,10 +956,10 @@ class ContinuousScheduler:
         self.ledger.append(ParkedGroup(
             lanes=lanes, pos=int(self.pos[victim]),
             horizon=int(self.lane_end[victim].max()), parked_step=self.t,
-            payload=self.allocator.park_slot(victim),
-            reserved_pages=group_reserve))
+            payload=c.allocator.park_slot(c.local(victim)),
+            reserved_pages=group_reserve, wclass=c.index))
         self.lane_end[victim] = -1
-        target[victim] = self.prefix_len
+        target[victim] = int(self.prefix_by_slot[victim])
         fresh.add(victim)
         to_reset[victim] = True
         self.stats.preemptions += 1
@@ -720,10 +968,11 @@ class ContinuousScheduler:
         """Would ``req`` be admitted into ``slot`` rewound to the primed
         prefix — the same horizon/pool arithmetic the fill loop applies to
         a fresh slot."""
-        end = self.prefix_len + len(req.prompt) + req.max_new_tokens
-        if end > self.engine.max_len:
+        c = self._cls(slot)
+        end = c.prefix_len + len(req.prompt) + req.max_new_tokens
+        if end > c.max_len:
             return False
-        return not self.paged or self._fits_pages({slot}, {slot: end})
+        return not self.paged or self._fits_pages(c, {slot}, {slot: end})
 
     def _resume_parked(self, target: dict) -> None:
         """Restore parked groups (oldest first) into empty slots.  At most
@@ -741,7 +990,14 @@ class ContinuousScheduler:
                 break
             if slot in target or not self.table.slot_empty(slot):
                 continue
-            group = self.ledger.head()
+            c = self._cls(slot)
+            # Oldest parked group of this slot's width class — the cache
+            # payload's shape is class-specific, so a group can only ever
+            # resume where it parked.  Single class: the ledger head.
+            group = next((g for g in self.ledger if g.wclass == c.index),
+                         None)
+            if group is None:
+                continue
             head = self._peek()
             if (not reserved_for_head and head is not None
                     and self.eviction.outranks(head,
@@ -749,8 +1005,8 @@ class ContinuousScheduler:
                     and self._fits_fresh(head, slot)):
                 reserved_for_head = True
                 continue
-            self.ledger.popleft()
-            self.allocator.resume_slot(slot, group.payload)
+            self.ledger.take(group)
+            c.allocator.resume_slot(c.local(slot), group.payload)
             self.pos[slot] = group.pos
             for l, req in group.lanes.items():
                 self.table.occupy(slot, l, req.rid)
@@ -782,7 +1038,7 @@ class ContinuousScheduler:
         """Legacy one-token step: every live lane feeds exactly one token
         (prompt ramp or last output) and every slot advances one position —
         the ``prefill_chunk == 1`` path, bit-for-bit the original engine."""
-        mask = self.table.lane_mask()                    # (B, N)
+        mask = self.table.lane_mask()                    # (B, N_max)
         tokens = np.zeros((self.n_slots, self.n_lanes), np.int32)
         for s in range(self.n_slots):
             for l in range(self.n_lanes):
@@ -793,38 +1049,53 @@ class ContinuousScheduler:
                 tokens[s, l] = req.prompt[req.fed] if req.ramping \
                     else req.output[-1]
 
-        block_table = None
-        if self.paged:
-            # Map every live slot's write position to a page; empty slots
-            # write to the allocator's trash page.
-            self.allocator.ensure(self.pos, mask.sum(axis=1) > 0)
-            block_table = self.allocator.block_table
-
-        state = ServeState(cache=self.allocator.cache, pos=self.pos.copy(),
-                           index_embeds=self.index_embeds,
-                           cross_kv=self.cross_kv)
-        mux_active = self.engine.cfg.mux.active
-        toks = tokens if mux_active else tokens[:, 0]
-        logits, state = self.engine.step(state, toks, lane_mask=mask,
-                                         block_table=block_table)
-        self.allocator.adopt(state.cache)
-        self.pos += 1
-        logits = np.asarray(logits)
-        if not mux_active:
-            logits = logits[:, None, :]                  # (B, 1, V)
-
+        # One variant launch per width class over its slot block.  An idle
+        # class skips its launch entirely (multi-class only: the
+        # single-class scheduler steps unconditionally, like it always
+        # has), and a skipped class's positions do not advance.
+        logits_by_class: list = [None] * len(self.classes)
         released = set()
-        for s in range(self.n_slots):
-            for l in range(self.n_lanes):
-                rid = int(self.table.grid[s, l])
-                if rid < 0:
-                    continue
-                req = self.requests[rid]
-                if req.ramping:
-                    req.fed += 1
-                    if req.ramping:      # prompt not fully consumed yet
+        for c in self.classes:
+            sl = slice(c.start, c.start + c.n_slots)
+            cmask = mask[sl, :c.width]
+            if self.multiclass and not cmask.any():
+                continue
+            block_table = None
+            if self.paged:
+                # Map every live slot's write position to a page; empty
+                # slots write to the allocator's trash page.
+                c.allocator.ensure(self.pos[sl], cmask.sum(axis=1) > 0)
+                block_table = c.allocator.block_table
+            state = ServeState(cache=c.allocator.cache,
+                               pos=self.pos[sl].copy(),
+                               index_embeds=c.index_embeds,
+                               cross_kv=c.cross_kv)
+            toks = tokens[sl, :c.width] if c.mux_active \
+                else tokens[sl, 0]
+            logits, state = c.engine.step(state, toks, lane_mask=cmask,
+                                          block_table=block_table)
+            c.allocator.adopt(state.cache)
+            self.pos[sl] += 1
+            logits = np.asarray(logits)
+            if not c.mux_active:
+                logits = logits[:, None, :]              # (b, 1, V)
+            logits_by_class[c.index] = logits
+
+        for c in self.classes:
+            logits = logits_by_class[c.index]
+            if logits is None:
+                continue
+            for s in c.slots:
+                for l in range(c.width):
+                    rid = int(self.table.grid[s, l])
+                    if rid < 0:
                         continue
-                self._emit(req, logits[s, l], s, l, released)
+                    req = self.requests[rid]
+                    if req.ramping:
+                        req.fed += 1
+                        if req.ramping:  # prompt not fully consumed yet
+                            continue
+                    self._emit(req, logits[c.local(s), l], s, l, released)
         return mask, released, None
 
     def _run_chunked_step(self):
@@ -834,7 +1105,7 @@ class ContinuousScheduler:
         token — their extra chunk rows masked out of the mixed stream and
         the logits (``lane_mask`` is (B, N, C) here)."""
         C = self.chunk
-        mask = self.table.lane_mask()                    # (B, N) occupancy
+        mask = self.table.lane_mask()                    # (B, N_max) occup.
         tokens = np.zeros((self.n_slots, self.n_lanes, C), np.int32)
         contrib = np.zeros((self.n_slots, self.n_lanes, C), np.float32)
         valid = np.ones(self.n_slots, np.int32)          # rows per slot
@@ -855,42 +1126,58 @@ class ContinuousScheduler:
                     tokens[s, l, 0] = req.output[-1]
                     contrib[s, l, 0] = 1.0
 
-        block_table = None
-        if self.paged:
-            # Map every live slot's write range [pos, pos + valid) to pages.
-            self.allocator.ensure(self.pos, mask.sum(axis=1) > 0, lens=valid)
-            block_table = self.allocator.block_table
-
-        state = ServeState(cache=self.allocator.cache, pos=self.pos.copy(),
-                           index_embeds=self.index_embeds,
-                           cross_kv=self.cross_kv)
-        mux_active = self.engine.cfg.mux.active
-        toks = tokens if mux_active else tokens[:, 0, :]
-        logits, state = self.engine.step(state, toks, lane_mask=contrib,
-                                         block_table=block_table,
-                                         chunk_lens=valid)
-        self.allocator.adopt(state.cache)
-        self.pos += valid
-        logits = np.asarray(logits)                      # (B, N, C, V)
-        if not mux_active:
-            logits = logits[:, None, :, :]               # (B, 1, C, V)
-
+        logits_by_class: list = [None] * len(self.classes)
         released = set()
-        for s in range(self.n_slots):
-            for l in range(self.n_lanes):
-                rid = int(self.table.grid[s, l])
-                if rid < 0:
-                    continue
-                req = self.requests[rid]
-                if req.ramping:
-                    take = int(takes[s, l])
-                    req.fed += take
-                    if req.ramping:      # prompt not fully consumed yet
+        for c in self.classes:
+            sl = slice(c.start, c.start + c.n_slots)
+            cmask = mask[sl, :c.width]
+            if self.multiclass and not cmask.any():
+                valid[sl] = 0            # skipped class: no position take
+                continue
+            block_table = None
+            if self.paged:
+                # Map every live slot's write range [pos, pos+valid) to
+                # pages.
+                c.allocator.ensure(self.pos[sl], cmask.sum(axis=1) > 0,
+                                   lens=valid[sl])
+                block_table = c.allocator.block_table
+            state = ServeState(cache=c.allocator.cache,
+                               pos=self.pos[sl].copy(),
+                               index_embeds=c.index_embeds,
+                               cross_kv=c.cross_kv)
+            ctoks = tokens[sl, :c.width, :] if c.mux_active \
+                else tokens[sl, 0, :]
+            logits, state = c.engine.step(state, ctoks,
+                                          lane_mask=contrib[sl, :c.width],
+                                          block_table=block_table,
+                                          chunk_lens=valid[sl])
+            c.allocator.adopt(state.cache)
+            self.pos[sl] += valid[sl]
+            logits = np.asarray(logits)                  # (b, w, C, V)
+            if not c.mux_active:
+                logits = logits[:, None, :, :]           # (b, 1, C, V)
+            logits_by_class[c.index] = logits
+
+        for c in self.classes:
+            logits = logits_by_class[c.index]
+            if logits is None:
+                continue
+            for s in c.slots:
+                for l in range(c.width):
+                    rid = int(self.table.grid[s, l])
+                    if rid < 0:
                         continue
-                    row = take - 1       # first token: last prompt row
-                else:
-                    row = 0
-                self._emit(req, logits[s, l, row], s, l, released)
+                    req = self.requests[rid]
+                    if req.ramping:
+                        take = int(takes[s, l])
+                        req.fed += take
+                        if req.ramping:  # prompt not fully consumed yet
+                            continue
+                        row = take - 1   # first token: last prompt row
+                    else:
+                        row = 0
+                    self._emit(req, logits[c.local(s), l, row], s, l,
+                               released)
         return mask, released, valid
 
     def _emit(self, req: Request, lane_logits, s: int, l: int,
@@ -899,6 +1186,10 @@ class ContinuousScheduler:
         tok = self.sampling.select(req, lane_logits)
         if not req.output:
             req.ttft = self.t - req.arrival
+            if self.multiclass and req.width:
+                acc = self._width_ttft.setdefault(req.width, [0, 0])
+                acc[0] += req.ttft
+                acc[1] += 1
             if self.tracer.enabled:
                 self.tracer.event("first_token", rid=req.rid, slot=s, lane=l,
                                   ttft=req.ttft)
@@ -924,11 +1215,15 @@ class ContinuousScheduler:
             drained = np.array([s in released and self.table.slot_empty(s)
                                 for s in range(self.n_slots)])
             if drained.any():
-                self.allocator.reset_slots(drained)
-                self.pos[drained] = self.prefix_len
+                for c in self.classes:
+                    sel = drained[c.start:c.start + c.n_slots]
+                    if sel.any():
+                        c.allocator.reset_slots(sel)
+                self.pos[drained] = self.prefix_by_slot[drained]
                 self.stats.slot_resets += int(drained.sum())
-            self.stats.peak_pages = max(self.stats.peak_pages,
-                                        self.allocator.table.peak_in_use)
+            self.stats.peak_pages = max(
+                self.stats.peak_pages,
+                sum(c.allocator.table.peak_in_use for c in self.classes))
 
         self.stats.decode_steps += 1
         self.stats.occupancy_sum += float(mask.mean())
@@ -952,20 +1247,43 @@ class ContinuousScheduler:
             m.gauge("generated_tokens", self.stats.generated_tokens)
             m.gauge("decode_steps", self.stats.decode_steps)
             m.gauge("preemptions", self.stats.preemptions)
+            if self.multiclass:
+                # Width-class gauges (multi-class only, so the fixed-N
+                # metric rows stay byte-identical): live lanes per class,
+                # compiled variant count, per-class mean TTFT so far.
+                m.gauge("width_variants", self.engine.variant_compiles)
+                for c in self.classes:
+                    lanes = int(mask[c.start:c.start + c.n_slots,
+                                     :c.width].sum())
+                    m.gauge(f"width{c.width}_lanes", lanes)
+                    acc = self._width_ttft.get(c.width)
+                    if acc:
+                        m.gauge(f"width{c.width}_ttft_mean",
+                                acc[0] / acc[1])
             if self.paged:
-                table = self.allocator.table
-                m.gauge("pages_in_use", table.pages_in_use)
-                m.gauge("free_pages", table.free_pages)
-                m.gauge("peak_pages", table.peak_in_use)
+                m.gauge("pages_in_use",
+                        sum(c.allocator.table.pages_in_use
+                            for c in self.classes))
+                m.gauge("free_pages",
+                        sum(c.allocator.table.free_pages
+                            for c in self.classes))
+                m.gauge("peak_pages",
+                        sum(c.allocator.table.peak_in_use
+                            for c in self.classes))
                 if self.engine.cfg.serving.use_kernel:
                     # PR 7's bench-only grid probe, lifted into telemetry:
                     # grid steps and compute-skipped K-blocks of this
                     # step's kernel launch (per layer — every layer runs
-                    # the same grid over the same block table).
-                    grid, skipped, _ = kblock_stats(
-                        np.asarray(self.allocator.table.rows),
-                        self.engine.cfg.serving.kblock_pages,
-                        self.engine.cfg.n_kv_heads)
+                    # the same grid over the same block table; width
+                    # classes launch one grid per class, summed here).
+                    grid = skipped = 0
+                    for c in self.classes:
+                        g, sk, _ = kblock_stats(
+                            np.asarray(c.allocator.table.rows),
+                            c.engine.cfg.serving.kblock_pages,
+                            c.engine.cfg.n_kv_heads)
+                        grid += g
+                        skipped += sk
                     m.count("kernel_grid_steps", grid)
                     m.count("kernel_skipped_blocks", skipped)
             tr.snap(self.t)

@@ -517,6 +517,124 @@ def test_min_residency_stops_victim_churn(key):
     assert shielded.preemptions == 0 and pre50[0] == pre50[1] == 0
 
 
+def test_max_preemptions_caps_victim_churn(key):
+    """``serving.max_preemptions`` K: a request parked K times becomes
+    eviction-immune — its slot drops out of ``_park_candidates`` — so a
+    flapping latency class cannot bounce the same batch request forever.
+    K=0 (the default) keeps the uncapped flap churn bitwise; K=2 bounds
+    every request's ``preempted`` at 2; K=1 at 1.  Every request still
+    completes, and the capped victims' outputs stay bitwise-identical to
+    an unpreempted run (parks lost nothing)."""
+    cfg = _cfg()
+    params = Backbone.init(key, cfg)
+    victims = _slo_requests([(2, 24, 0, "batch"), (2, 24, 0, "batch")])
+    flaps = _slo_requests([(1, 2, 4 + 6 * k, "latency") for k in range(4)],
+                          seed=1)
+    flaps = [dataclasses.replace(r, rid=2 + r.rid) for r in flaps]
+    trace = victims + flaps
+
+    def run(k):
+        serving = dataclasses.replace(_serving_cfg(False),
+                                      max_preemptions=k)
+        sched = ContinuousScheduler(
+            Engine(params, dataclasses.replace(cfg, serving=serving),
+                   batch=1, max_len=64))
+        stats = sched.run([r.fresh() for r in trace])
+        assert stats.finished == len(trace)
+        return stats, {q.rid: q for q in sched.finished}
+
+    ref = ContinuousScheduler(
+        Engine(params, dataclasses.replace(
+            cfg, serving=dataclasses.replace(_serving_cfg(False),
+                                             preempt=False)),
+            batch=1, max_len=64))
+    ref.run([r.fresh() for r in victims])
+    ref_out = {q.rid: list(q.output) for q in ref.finished}
+
+    churn, out0 = run(0)
+    assert out0[0].preempted == out0[1].preempted == 4   # one park per flap
+    capped, out2 = run(2)
+    assert capped.preemptions < churn.preemptions
+    assert max(out2[0].preempted, out2[1].preempted) <= 2
+    tight, out1 = run(1)
+    assert max(out1[0].preempted, out1[1].preempted) <= 1
+    for out in (out2, out1):
+        assert list(out[0].output) == ref_out[0]
+        assert list(out[1].output) == ref_out[1]
+
+
+# ---------------------------------------------------------------------------
+# Width classes (ISSUE 10: adaptive multiplexing width)
+# ---------------------------------------------------------------------------
+
+def test_width_set_native_singleton_is_bitwise_legacy(key):
+    """``width_set={N}`` at the native width is one class on the engine
+    itself: same admission decisions, same positions, same tokens, same
+    stats as the fixed-N scheduler, bit for bit, with zero variant
+    compiles."""
+    cfg = _cfg()
+    params = Backbone.init(key, cfg)
+    trace = poisson_trace(10, rate=1.0, prompt_len=2, gen_len=4, vocab=512,
+                          max_total=30, seed=3, slo_mix=0.5)
+
+    def run(width_set):
+        serving = dataclasses.replace(_serving_cfg(False),
+                                      width_set=width_set)
+        eng = Engine(params, dataclasses.replace(cfg, serving=serving),
+                     batch=2, max_len=48)
+        sched = ContinuousScheduler(eng)
+        stats = sched.run([r.fresh() for r in trace])
+        return eng, sched, stats
+
+    eng_a, sched_a, a = run(())
+    eng_b, sched_b, b = run((cfg.mux.n,))
+    assert eng_b.variant_compiles == 0
+    assert not sched_b.multiclass and len(sched_b.classes) == 1
+    assert sched_b.classes[0].engine is eng_b
+    assert a.decode_steps == b.decode_steps
+    assert a.preemptions == b.preemptions and a.resumes == b.resumes
+    assert b.final_load.width_loads == ()
+    for qa, qb in zip(sorted(sched_a.finished, key=lambda q: q.rid),
+                      sorted(sched_b.finished, key=lambda q: q.rid)):
+        assert qa.rid == qb.rid and list(qa.output) == list(qb.output)
+        assert qa.ttft == qb.ttft and qa.admitted_step == qb.admitted_step
+
+
+def test_width_classes_partition_and_policy_targets(key):
+    """A {1, N} split partitions the slots (narrow class disabled-lane
+    masked), ``slo_tiered`` lands latency traffic on the narrow class and
+    batch traffic on the wide one, and per-width stats/loads report both
+    classes."""
+    cfg = _cfg()   # native n=2
+    params = Backbone.init(key, cfg)
+    serving = dataclasses.replace(_serving_cfg(False), preempt=False,
+                                  width_set=(1, 2),
+                                  width_policy="slo_tiered")
+    eng = Engine(params, dataclasses.replace(cfg, serving=serving),
+                 batch=2, max_len=48)
+    sched = ContinuousScheduler(eng)
+    assert [c.width for c in sched.classes] == [1, 2]
+    assert [c.n_slots for c in sched.classes] == [1, 1]
+    # narrow slot serves 1 lane; its lane 1 is disabled
+    assert sched.table.lane_counts.tolist() == [1, 2]
+    trace = _slo_requests([(2, 6, 0, "latency"), (2, 6, 0, "batch"),
+                           (2, 6, 0, "batch"), (2, 6, 1, "latency")])
+    stats = sched.run([r.fresh() for r in trace])
+    assert stats.finished == 4
+    widths = {q.rid: q.width for q in sched.finished}
+    slos = {r.rid: r.slo for r in trace}
+    # first latency arrival rides the narrow class, first two batch
+    # arrivals the wide one (the remaining latency overflows to width 2 —
+    # policy orders classes, it never strands a request)
+    assert widths[0] == 1
+    assert all(widths[r] == 2 for r in widths if slos[r] == "batch")
+    assert set(stats.per_width) == {1, 2}
+    # two compiles: the width-1 variant, and the native width re-batched to
+    # its 1-slot class block (the engine itself only serves a class that
+    # spans the full batch)
+    assert eng.variant_compiles == 2
+
+
 # ---------------------------------------------------------------------------
 # SchedulerLoad probe (ISSUE 6: public load/headroom snapshot)
 # ---------------------------------------------------------------------------

@@ -73,18 +73,21 @@ def _trace(rng, n_req, max_lp, max_gen):
 def _check_page_conservation(sched):
     """Free list + mapped rows + swap-ledger parked rows partition the
     usable pages exactly — a parked group's pages stay resident but leave
-    the table, so conservation must extend over the ledger."""
-    table = sched.allocator.table
-    mapped = [int(p) for p in table.rows.ravel() if p >= 0]
-    parked = [int(p) for g in sched.ledger
-              for p in g.payload.row if p >= 0]
-    held = mapped + parked
-    assert len(held) == len(set(held)), "page double-mapped"
-    assert 0 not in held, "trash page mapped"
-    free = set(table.free)
-    assert not free.intersection(held), "page both free and held"
-    assert len(free) + len(held) == table.usable_pages, "page lost"
-    assert table.pages_in_use == len(held)
+    the table, so conservation must extend over the ledger.  Width classes
+    hold disjoint pools, so the invariant is per class (parked groups are
+    matched to their class through the ledger's ``wclass`` tag)."""
+    for c in sched.classes:
+        table = c.allocator.table
+        mapped = [int(p) for p in table.rows.ravel() if p >= 0]
+        parked = [int(p) for g in sched.ledger if g.wclass == c.index
+                  for p in g.payload.row if p >= 0]
+        held = mapped + parked
+        assert len(held) == len(set(held)), "page double-mapped"
+        assert 0 not in held, "trash page mapped"
+        free = set(table.free)
+        assert not free.intersection(held), "page both free and held"
+        assert len(free) + len(held) == table.usable_pages, "page lost"
+        assert table.pages_in_use == len(held)
 
 
 def _drive(sched, trace, *, max_steps=3000):
@@ -104,9 +107,12 @@ def _drive(sched, trace, *, max_steps=3000):
         parked = sched.ledger.live_requests()
         assert not set(live) & set(parked), "request both live and parked"
         # Occupied slots never write past the cache; empty slots' pos may
-        # drift (it rewinds on the next admission / drain reset).
+        # drift (it rewinds on the next admission / drain reset).  Each
+        # width class carries its own variant max_len.
         occupied = sched.table.lane_mask().sum(axis=1) > 0
-        assert (sched.pos[occupied] <= sched.engine.max_len).all(), \
+        maxlens = np.concatenate(
+            [np.full(c.n_slots, c.max_len) for c in sched.classes])
+        assert (sched.pos[occupied] <= maxlens[occupied]).all(), \
             "live slot overran cache"
         if sched.paged:
             _check_page_conservation(sched)
@@ -288,6 +294,101 @@ def test_fuzz_mla_moe_preempt_resume_invariants(seed, chunk):
     keep = sched_p.allocator.n_prefix_pages * N_SLOTS
     assert table.pages_in_use == keep
     assert table.free_pages == table.usable_pages - keep
+
+
+@settings(max_examples=4, deadline=None, derandomize=True)
+@given(seed=st.integers(0, 10_000), chunk=st.integers(1, 3),
+       widths=st.integers(0, 1), policy=st.integers(0, 1))
+def test_fuzz_width_mix_invariants(seed, chunk, widths, policy):
+    """ISSUE 10 sweep: random preempting two-SLO traces on a heterogeneous
+    width-class pool.  Page conservation holds every step over the disjoint
+    per-class pools, no request loses tokens through park/resume, both
+    builds assign the same width per request (the policies here are
+    load-blind, hence deterministic), paged == contiguous token-for-token,
+    and the telemetry lifecycle stays clean."""
+    rng = np.random.default_rng(seed)
+    trace = _trace(rng, n_req=int(rng.integers(5, 9)), max_lp=5, max_gen=6)
+    for r in trace:
+        r.slo = "latency" if rng.random() < 0.4 else "batch"
+    width_set = ((1, 2), (1,))[widths]
+    width_policy = ("static", "slo_tiered")[policy]
+    max_len = CFG.mux.prefix_len + 4 * (5 + 6)
+    page_size = 4
+    from repro.serving.paging import pages_for
+    pool = 2 * N_SLOTS * pages_for(max_len, page_size) + 1
+
+    def build(paged, tracer):
+        serving = ServingConfig(paged=paged, page_size=page_size,
+                                pool_pages=pool if paged else 0,
+                                prefill_chunk=chunk, policy="slo",
+                                preempt=True, width_set=width_set,
+                                width_policy=width_policy)
+        cfg = dataclasses.replace(CFG, serving=serving)
+        eng = Engine(PARAMS, cfg, batch=N_SLOTS, max_len=max_len)
+        return ContinuousScheduler(eng, tracer=tracer)
+
+    tr_c, tr_p = Tracer(), Tracer()
+    sched_c = build(paged=False, tracer=tr_c)
+    out_c = _drive(sched_c, [r.fresh() for r in trace])
+    sched_p = build(paged=True, tracer=tr_p)
+    out_p = _drive(sched_p, [r.fresh() for r in trace])
+
+    assert tr_c.lifecycle_errors() == []
+    assert tr_p.lifecycle_errors() == []
+
+    # no token loss across classes: every request completes with its budget
+    for r in trace:
+        assert len(out_c[r.rid]) == r.max_new_tokens
+    assert out_c == out_p
+
+    # every request rode a configured width, and both builds agree on which
+    w_c = {q.rid: q.width for q in sched_c.finished}
+    w_p = {q.rid: q.width for q in sched_p.finished}
+    assert set(w_c) == {r.rid for r in trace}
+    assert set(w_c.values()) <= set(width_set)
+    assert w_c == w_p
+
+    # no page leak after drain: each class keeps only its resident prefixes
+    for c in sched_p.classes:
+        keep = c.allocator.n_prefix_pages * c.n_slots
+        assert c.allocator.table.pages_in_use == keep
+        assert c.allocator.table.free_pages == \
+            c.allocator.table.usable_pages - keep
+
+
+def test_width_singleton_bitwise_on_fuzz_trace():
+    """``width_set={N}`` at the native width is the fixed-N scheduler on a
+    fuzz trace: same tokens, same step/preemption counts, zero variant
+    compiles — the class tier is a transparent shim for a single native
+    class spanning the whole batch."""
+    rng = np.random.default_rng(7)
+    trace = _trace(rng, n_req=7, max_lp=5, max_gen=6)
+    for r in trace:
+        r.slo = "latency" if rng.random() < 0.4 else "batch"
+    max_len = CFG.mux.prefix_len + 4 * (5 + 6)
+    page_size = 4
+    from repro.serving.paging import pages_for
+    pool = 2 * N_SLOTS * pages_for(max_len, page_size) + 1
+
+    def build(width_set):
+        serving = ServingConfig(paged=True, page_size=page_size,
+                                pool_pages=pool, prefill_chunk=2,
+                                policy="slo", preempt=True,
+                                width_set=width_set)
+        cfg = dataclasses.replace(CFG, serving=serving)
+        eng = Engine(PARAMS, cfg, batch=N_SLOTS, max_len=max_len)
+        return ContinuousScheduler(eng), eng
+
+    legacy, _ = build(())
+    out_l = _drive(legacy, [r.fresh() for r in trace])
+    single, eng = build((CFG.mux.n,))
+    out_s = _drive(single, [r.fresh() for r in trace])
+
+    assert out_s == out_l
+    assert single.stats.decode_steps == legacy.stats.decode_steps
+    assert single.stats.preemptions == legacy.stats.preemptions
+    assert single.stats.resumes == legacy.stats.resumes
+    assert eng.variant_compiles == 0
 
 
 @settings(max_examples=3, deadline=None, derandomize=True)

@@ -189,6 +189,62 @@ def test_lowrank_rejects_empty_subspaces(key):
     get_mux("lowrank").init(key, MuxConfig(n=5, strategy="lowrank"), 32)
 
 
+def test_width_set_members_validated_at_config_time():
+    """Every width in ``serving.width_set`` must satisfy the mux strategy's
+    own constraints — an invalid member fails at ModelConfig construction
+    (naming the width and the constraint), not at the first variant
+    compile mid-serve."""
+    from repro.configs.base import ServingConfig
+    import dataclasses
+    ok = _tiny_model_cfg(n=4, strategy="binary")          # 32 % 4 == 0
+    # width 2 divides 32 too: the narrowed classes stay valid
+    dataclasses.replace(ok, serving=ServingConfig(width_set=(1, 2, 4)))
+    # width 3 violates binary's d % n == 0 at d=32
+    with pytest.raises(ValueError, match="width_set member 3"):
+        dataclasses.replace(ok, serving=ServingConfig(width_set=(1, 3, 4)))
+    # a width beyond the native n has no params to narrow from
+    with pytest.raises(ValueError, match="exceeds"):
+        dataclasses.replace(ok, serving=ServingConfig(width_set=(8,)))
+
+
+def test_width_set_shape_validated_at_serving_config_time():
+    """Malformed width_set fails in ServingConfig itself: non-int members,
+    widths < 1, duplicates.  Valid sets normalize to ascending order."""
+    from repro.configs.base import ServingConfig
+    with pytest.raises(ValueError, match="width_set"):
+        ServingConfig(width_set=(0, 2))
+    with pytest.raises(ValueError, match="width_set"):
+        ServingConfig(width_set=(2, 2))
+    with pytest.raises(ValueError, match="width_set"):
+        ServingConfig(width_set=(True, 2))
+    assert ServingConfig(width_set=(4, 1, 2)).width_set == (1, 2, 4)
+
+
+@pytest.mark.parametrize("strategy", ALL_MUX)
+def test_narrow_matches_wide_prefix(key, strategy):
+    """``narrow(params, cfg, w)`` must transform the first w instances
+    exactly as the full-width params do — the engine-variant contract that
+    makes a width-w class bitwise-consistent with lanes 0..w-1 of the
+    native engine.  Two strategies trade prefix equality away by design:
+    binary rebuilds its mask at the new width so no feature dim goes dark,
+    and parameter-free rotation rescales its shifts to keep them maximally
+    spread at the new width."""
+    if strategy in ("binary", "rotation"):
+        pytest.skip(f"{strategy} narrow re-derives at the new width")
+    n, w, d = 4, 2, 64
+    cfg = MuxConfig(n=n, strategy=strategy)
+    s = get_mux(strategy)
+    params = s.init(key, cfg, d)
+    import dataclasses
+    ncfg = dataclasses.replace(cfg, n=w)
+    nparams = s.narrow(params, cfg, w)
+    x = jax.random.normal(key, (2, w, 3, d))
+    wide = s.transform(params, jnp.concatenate(
+        [x, jnp.zeros((2, n - w, 3, d))], axis=1), cfg)[:, :w]
+    np.testing.assert_allclose(s.transform(nparams, x, ncfg), wide,
+                               rtol=1e-5, atol=1e-6)
+
+
 def test_duplicate_registration_rejected():
     """Re-registering a live name raises instead of silently replacing the
     builtin; unregister_mux is the explicit replacement path."""
